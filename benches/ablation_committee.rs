@@ -1,0 +1,12 @@
+//! ABL1 — committee election policy ablation (paper §VI.D): score-based
+//! election with rotation vs uniformly-random committees, attacked BSFL.
+
+mod bench_common;
+
+fn main() -> anyhow::Result<()> {
+    let h = bench_common::harness("ablation_committee")?;
+    let results =
+        splitfed::exp::ablation_committee(&h, bench_common::scale(), bench_common::seed())?;
+    splitfed::exp::save_all(&h, "ablation_committee", &results)?;
+    Ok(())
+}

@@ -1,0 +1,21 @@
+//! ABL2 — top-K sensitivity (paper §V.E): attacked BSFL at 36 nodes for
+//! K = 1..6.  The paper's bound wants 2 < K < N/2; large K re-admits
+//! poisoned shards, K=1 discards too much honest signal.
+
+mod bench_common;
+
+fn main() -> anyhow::Result<()> {
+    let h = bench_common::harness("ablation_topk")?;
+    let results = splitfed::exp::ablation_topk(&h, bench_common::scale(), bench_common::seed())?;
+    splitfed::exp::save_all(&h, "ablation_topk", &results)?;
+
+    // shape: the best K should be strictly below the shard count
+    let best = results
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.test_loss.partial_cmp(&b.1.test_loss).unwrap())
+        .map(|(i, _)| i + 1)
+        .unwrap_or(0);
+    println!("\nbest K under attack: {best} (paper uses K=3 at 6 shards)");
+    Ok(())
+}

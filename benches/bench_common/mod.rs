@@ -1,0 +1,37 @@
+//! Shared scaffolding for the paper-artifact benches.
+//!
+//! Each bench target is a standalone `main()` (the offline crate cache
+//! has no criterion; `harness = false` in Cargo.toml).  Scale comes from
+//! `SPLITFED_BENCH_SCALE` (smoke|small|paper), defaulting to smoke so
+//! `cargo bench` finishes in minutes; `paper` reproduces the full
+//! settings.
+
+use std::path::Path;
+
+use splitfed::exp::{Harness, Scale};
+
+pub fn scale() -> Scale {
+    match std::env::var("SPLITFED_BENCH_SCALE").as_deref() {
+        Ok("paper") => Scale::Paper,
+        Ok("small") => Scale::Small,
+        _ => Scale::Smoke,
+    }
+}
+
+pub fn seed() -> u64 {
+    std::env::var("SPLITFED_BENCH_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(42)
+}
+
+pub fn harness(name: &str) -> anyhow::Result<Harness> {
+    splitfed::util::log::init_from_env();
+    let out = format!("results/bench/{name}");
+    eprintln!(
+        "[bench {name}] scale={:?} seed={} out={out}",
+        scale(),
+        seed()
+    );
+    Harness::new(Path::new("artifacts"), Path::new(&out))
+}

@@ -1,0 +1,41 @@
+//! FIG2 — validation-loss convergence, 9 nodes (paper Figure 2).
+//!
+//! Regenerates the figure's series: SL / SFL / SSFL / BSFL, normal and
+//! attacked (33% label-flip + voting attack), as CSV curves under
+//! `results/bench/fig2/` plus a summary table.
+//!
+//! `SPLITFED_BENCH_SCALE=paper cargo bench --bench fig2_convergence`
+//! runs the full 60-round, 6k-images/node setting.
+
+mod bench_common;
+
+fn main() -> anyhow::Result<()> {
+    let h = bench_common::harness("fig2")?;
+    let results = splitfed::exp::fig_convergence(&h, 9, bench_common::scale(), bench_common::seed())?;
+    splitfed::exp::save_all(&h, "fig2", &results)?;
+
+    // reproduction checks (shape, not absolute numbers)
+    let get = |label: &str| {
+        results
+            .iter()
+            .find(|r| r.label.contains(label))
+            .expect(label)
+    };
+    let bsfl_norm = get("bsfl_normal");
+    let bsfl_atk = get("bsfl_attacked");
+    let ssfl_atk = get("ssfl_attacked");
+    println!("\nshape checks:");
+    println!(
+        "  BSFL attacked ({:.3}) vs SSFL attacked ({:.3}): {}",
+        bsfl_atk.test_loss,
+        ssfl_atk.test_loss,
+        if bsfl_atk.test_loss < ssfl_atk.test_loss { "OK (paper shape)" } else { "MISMATCH" }
+    );
+    println!(
+        "  BSFL attacked ({:.3}) ~ BSFL normal ({:.3}): ratio {:.2}",
+        bsfl_atk.test_loss,
+        bsfl_norm.test_loss,
+        bsfl_atk.test_loss / bsfl_norm.test_loss
+    );
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! FIG3 — validation-loss convergence, 36 nodes (paper Figure 3).
+//!
+//! Same series as FIG2 at the large setting: 6 shards x 5 clients,
+//! K=3, 47% attackers in the attacked runs.
+
+mod bench_common;
+
+fn main() -> anyhow::Result<()> {
+    let h = bench_common::harness("fig3")?;
+    let results =
+        splitfed::exp::fig_convergence(&h, 36, bench_common::scale(), bench_common::seed())?;
+    splitfed::exp::save_all(&h, "fig3", &results)?;
+
+    let get = |label: &str| {
+        results
+            .iter()
+            .find(|r| r.label.contains(label))
+            .expect(label)
+    };
+    println!("\nshape checks:");
+    let pairs = [
+        ("ssfl_normal beats sfl_normal", "ssfl_normal", "sfl_normal"),
+        ("bsfl_attacked beats sfl_attacked", "bsfl_attacked", "sfl_attacked"),
+        ("bsfl_attacked beats ssfl_attacked", "bsfl_attacked", "ssfl_attacked"),
+    ];
+    for (desc, a, b) in pairs {
+        let (ra, rb) = (get(a), get(b));
+        println!(
+            "  {desc}: {:.3} vs {:.3} -> {}",
+            ra.test_loss,
+            rb.test_loss,
+            if ra.test_loss < rb.test_loss { "OK" } else { "MISMATCH" }
+        );
+    }
+    Ok(())
+}

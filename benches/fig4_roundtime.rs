@@ -1,0 +1,55 @@
+//! FIG4 — round completion times, 36 nodes (paper Figure 4).
+//!
+//! Per-algorithm virtual round times from measured compute + the netsim
+//! transmission model, plus the per-category traffic breakdown that
+//! explains them (activations/gradients vs model updates vs blockchain).
+
+mod bench_common;
+
+use splitfed::netsim::MsgKind;
+
+fn main() -> anyhow::Result<()> {
+    let h = bench_common::harness("fig4")?;
+    let results = splitfed::exp::fig4_roundtime(&h, bench_common::scale(), bench_common::seed())?;
+    splitfed::exp::save_all(&h, "fig4", &results)?;
+
+    println!("\ntraffic breakdown (bytes/run):");
+    println!(
+        "{:<8} {:>14} {:>14} {:>14} {:>14} {:>12}",
+        "algo", "activations", "gradients", "model_updates", "chain_tx", "blocks"
+    );
+    for r in &results {
+        println!(
+            "{:<8} {:>14} {:>14} {:>14} {:>14} {:>12}",
+            r.algo,
+            r.traffic.bytes(MsgKind::Activation),
+            r.traffic.bytes(MsgKind::Gradient),
+            r.traffic.bytes(MsgKind::ModelUpdate),
+            r.traffic.bytes(MsgKind::ChainTx),
+            r.traffic.bytes(MsgKind::Block),
+        );
+    }
+
+    // paper shape: ssfl << sfl ~ sl; bsfl between ssfl and sl
+    let t = |name: &str| {
+        results
+            .iter()
+            .find(|r| r.algo == name)
+            .map(|r| r.avg_round_s())
+            .unwrap_or(f64::NAN)
+    };
+    println!("\nshape checks:");
+    println!(
+        "  ssfl ({:.1}s) << sfl ({:.1}s): {}",
+        t("ssfl"),
+        t("sfl"),
+        if t("ssfl") < 0.5 * t("sfl") { "OK" } else { "MISMATCH" }
+    );
+    println!(
+        "  bsfl ({:.1}s) < sl ({:.1}s): {}",
+        t("bsfl"),
+        t("sl"),
+        if t("bsfl") < t("sl") { "OK" } else { "MISMATCH" }
+    );
+    Ok(())
+}

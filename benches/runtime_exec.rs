@@ -1,0 +1,69 @@
+//! Microbench — per-entry PJRT execution latency (the §Perf evidence for
+//! Layer 3: how much time is XLA compute vs coordinator overhead).
+//!
+//! Reports mean/min/max per entry point over repeated executions, plus
+//! the L3 overhead of a full SSFL round (everything that is not
+//! `execute`).
+
+mod bench_common;
+
+use std::path::Path;
+use std::time::Instant;
+
+use splitfed::config::{Algo, ExpConfig};
+use splitfed::data::synthetic;
+use splitfed::runtime::{ModelOps, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    splitfed::util::log::init_from_env();
+    let rt = Runtime::load(Path::new("artifacts"))?;
+    let ops = ModelOps::new(&rt);
+    let iters = 20usize;
+
+    let (mut client, mut server) = ops.init_models()?;
+    let ds = synthetic::generate(512, 7);
+    let batch = ds.batches(ops.train_batch_size()).next().unwrap();
+
+    // warm up every entry once
+    let a = ops.client_forward(&client, &batch)?;
+    let (_, da) = ops.server_train_step(&mut server, &a, &batch, 0.0)?;
+    ops.client_backward(&mut client, &batch, &da, 0.0)?;
+    ops.evaluate(&client, &server, &ds)?;
+    rt.reset_timing();
+
+    for _ in 0..iters {
+        let a = ops.client_forward(&client, &batch)?;
+        let (_, da) = ops.server_train_step(&mut server, &a, &batch, 0.01)?;
+        ops.client_backward(&mut client, &batch, &da, 0.01)?;
+        ops.full_train_step(&mut client, &mut server, &batch, 0.01)?;
+    }
+    ops.evaluate(&client, &server, &ds)?;
+
+    println!("per-entry PJRT latency over {iters} iters (train batch = {}):", ops.train_batch_size());
+    println!("{:<20} {:>8} {:>12}", "entry", "calls", "mean_ms");
+    for (name, t) in rt.timing() {
+        println!("{:<20} {:>8} {:>12.2}", name, t.calls, t.mean_s() * 1e3);
+    }
+
+    // L3 overhead measurement: full SSFL round wall time vs time inside
+    // execute()
+    let mut cfg = ExpConfig::paper_9(Algo::Ssfl);
+    cfg.rounds = 2;
+    cfg.samples_per_node = 128;
+    cfg.val_per_node = 32;
+    cfg.test_samples = 128;
+    let corpus = synthetic::generate(cfg.nodes * 170, 3);
+    let val = synthetic::generate(128, 4);
+    let test = synthetic::generate(128, 5);
+    rt.reset_timing();
+    let t0 = Instant::now();
+    let _ = splitfed::algos::run(&cfg, &ops, &corpus, &val, &test)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let inside: f64 = rt.timing().values().map(|t| t.total_s).sum();
+    println!("\nL3 coordinator overhead (2-round SSFL, 9 nodes):");
+    println!("  wall            {:>8.2} s", wall);
+    println!("  inside execute  {:>8.2} s ({:.1}%)", inside, 100.0 * inside / wall);
+    println!("  L3 overhead     {:>8.2} s ({:.1}%)", wall - inside, 100.0 * (wall - inside) / wall);
+    println!("\ntarget (DESIGN.md §Perf): overhead < 10% of wall");
+    Ok(())
+}

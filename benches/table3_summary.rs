@@ -1,0 +1,27 @@
+//! TABLE III — the paper's summary table (36 nodes): normal & attacked
+//! test loss and average round time for SL/SFL/SSFL/BSFL, plus the
+//! abstract's headline ratios (SSFL +31.2% perf / +85.2% scalability,
+//! BSFL +62.7% resilience, -11%/-10% round time vs SL/SFL).
+
+mod bench_common;
+
+fn main() -> anyhow::Result<()> {
+    let h = bench_common::harness("table3")?;
+    let (_results, headline) =
+        splitfed::exp::table3(&h, bench_common::scale(), bench_common::seed())?;
+
+    println!("\nshape verdicts:");
+    for (name, got, want) in [
+        ("ssfl_perf_gain", headline.ssfl_perf_gain, 0.312),
+        ("ssfl_scalability_gain", headline.ssfl_scalability_gain, 0.852),
+        ("bsfl_resilience_gain", headline.bsfl_resilience_gain, 0.627),
+    ] {
+        println!(
+            "  {name}: measured {:+.1}% (paper {:+.1}%) -> {}",
+            100.0 * got,
+            100.0 * want,
+            if got > 0.0 { "sign OK" } else { "SIGN MISMATCH" }
+        );
+    }
+    Ok(())
+}

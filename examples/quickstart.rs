@@ -1,0 +1,61 @@
+//! Quickstart — the end-to-end driver (deliverable (b) + the
+//! EXPERIMENTS.md §End-to-end run).
+//!
+//! Loads the AOT artifacts, trains the paper's split CNN with **SSFL**
+//! (3 shards x 2 clients, 9 nodes) on the synthetic Fashion-MNIST
+//! workload for a dozen rounds, logs the loss curve, and finishes with a
+//! test-set evaluation — proving all three layers compose: Pallas
+//! kernels inside the HLO, the JAX-lowered model, and the Rust
+//! coordinator/runtime.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::path::Path;
+
+use splitfed::config::{Algo, ExpConfig};
+use splitfed::exp::Harness;
+
+fn main() -> anyhow::Result<()> {
+    splitfed::util::log::init_from_env();
+
+    // 1. load artifacts + compile on PJRT (once)
+    let h = Harness::new(Path::new("artifacts"), Path::new("results/quickstart"))?;
+
+    // 2. configure the paper's 9-node SSFL topology, laptop-scale data
+    let mut cfg = ExpConfig::paper_9(Algo::Ssfl);
+    cfg.rounds = 12;
+    cfg.samples_per_node = 256;
+    cfg.test_samples = 512;
+
+    println!(
+        "== SSFL quickstart: {} nodes, {} shards x {} clients, {} rounds ==",
+        cfg.nodes, cfg.shards, cfg.clients_per_shard, cfg.rounds
+    );
+
+    // 3. train (real PJRT numerics, virtual-time round accounting)
+    let result = h.run_and_save(&cfg, "quickstart")?;
+
+    // 4. report
+    println!("\nround  val_loss  val_acc  round_s(virtual)");
+    for r in &result.records {
+        println!(
+            "{:>5}  {:>8.4}  {:>7.3}  {:>8.2}",
+            r.round, r.val_loss, r.val_acc, r.round_s
+        );
+    }
+    println!(
+        "\nfinal test loss = {:.4}, accuracy = {:.3}",
+        result.test_loss, result.test_acc
+    );
+    println!(
+        "avg virtual round time = {:.2}s; wall clock = {:.1}s",
+        result.avg_round_s(),
+        result.wall_s
+    );
+    println!("results saved under results/quickstart/");
+
+    anyhow::ensure!(result.test_acc > 0.5, "quickstart should reach >50% accuracy");
+    Ok(())
+}

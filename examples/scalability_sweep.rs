@@ -1,0 +1,66 @@
+//! Scalability sweep — round completion time vs node count.
+//!
+//! Reproduces the *mechanism* behind the paper's 85.2% scalability claim:
+//! the single SL server serializes every client's batches, so SL/SFL
+//! round time grows linearly with clients while SSFL's grows with
+//! clients-per-shard only.  Uses the measured compute profile + the
+//! event-driven netsim queue — no training, so the sweep is instant.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example scalability_sweep
+//! ```
+
+use std::path::Path;
+
+use splitfed::netsim::{self, LinkModel, ShardSim};
+use splitfed::runtime::{ModelOps, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    splitfed::util::log::init_from_env();
+    let rt = Runtime::load(Path::new("artifacts"))?;
+    let ops = ModelOps::new(&rt);
+    let prof = ops.profile_compute(2)?;
+
+    let sim = ShardSim {
+        link: LinkModel::lan(),
+        prof,
+        act_bytes: ops.act_bytes(),
+        grad_bytes: ops.grad_bytes(),
+    };
+    let batches = 16; // per client per round
+
+    println!("round completion time vs node count (batches/client = {batches})");
+    println!(
+        "{:>6} {:>12} {:>12} {:>14} {:>10}",
+        "nodes", "sl_seq_s", "sfl_par_s", "ssfl(6 shards)", "speedup"
+    );
+    for nodes in [9usize, 12, 18, 24, 36, 48, 72] {
+        let clients = nodes - 1;
+        let sl = sim
+            .round_sequential(clients, batches, 1_312)
+            .round_s;
+        let sfl = sim.round(clients, batches).round_s;
+        // SSFL: 6 shards, clients spread evenly
+        let shards = 6usize;
+        let per_shard = clients.div_ceil(shards);
+        let ssfl = netsim::parallel(&vec![sim.round(per_shard, batches).round_s; shards]);
+        println!(
+            "{:>6} {:>12.1} {:>12.1} {:>14.1} {:>9.1}x",
+            nodes,
+            sl,
+            sfl,
+            ssfl,
+            sfl / ssfl
+        );
+    }
+    println!(
+        "\nthe paper's Table III analogue: at 36 nodes SSFL cuts round time by \
+         ~{:.0}% vs SFL (paper: 85.2%)",
+        100.0 * (1.0 - {
+            let sfl = sim.round(35, batches).round_s;
+            let ssfl = netsim::parallel(&vec![sim.round(6, batches).round_s; 6]);
+            ssfl / sfl
+        })
+    );
+    Ok(())
+}

@@ -1,0 +1,122 @@
+"""AOT lowering: JAX entry points -> HLO *text* artifacts + manifest.
+
+This is the only place Python touches the model after development: it runs
+once (``make artifacts``) and emits, into ``artifacts/``:
+
+* ``<entry>.hlo.txt``   — one HLO-text module per entry point.
+* ``manifest.json``     — ordered input/output tensor specs per entry
+  point, plus model dims and batch sizes; the Rust runtime is driven
+  entirely by this file.
+* ``init/<name>.bin``   — little-endian f32 initial weights (seeded
+  He-normal) for the global client/server models, so every node in every
+  algorithm starts from the identical global model, as the paper's
+  "initialize the global models on the blockchain" step requires.
+
+Interchange is HLO **text**, not a serialized ``HloModuleProto``: jax
+>= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+_DTYPES = {"f32": jnp.float32, "s32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name, spec):
+    """Lower one entry point at its manifest shapes; returns HLO text."""
+    args = [
+        jax.ShapeDtypeStruct(tuple(s["shape"]), _DTYPES[s["dtype"]])
+        for _, s in spec["inputs"]
+    ]
+    lowered = jax.jit(spec["fn"]).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def write_init(out_dir: str, seed: int) -> dict:
+    """Write seeded initial global weights; returns name -> file map."""
+    init_dir = os.path.join(out_dir, "init")
+    os.makedirs(init_dir, exist_ok=True)
+    client, server = model.init_params(seed)
+    files = {}
+    for group, params in (("client", client), ("server", server)):
+        for pname, arr in params.items():
+            fname = f"init/{group}.{pname}.bin"
+            arr.astype("<f4").tofile(os.path.join(out_dir, fname))
+            files[f"{group}.{pname}"] = {
+                "file": fname,
+                "shape": list(arr.shape),
+            }
+    return files
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact dir")
+    ap.add_argument("--train-batch", type=int, default=model.TRAIN_BATCH)
+    ap.add_argument("--eval-batch", type=int, default=model.EVAL_BATCH)
+    ap.add_argument("--seed", type=int, default=42, help="init weights seed")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated entry subset (debug)"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = model.entry_points(args.train_batch, args.eval_batch)
+    if args.only:
+        keep = set(args.only.split(","))
+        entries = {k: v for k, v in entries.items() if k in keep}
+
+    manifest = {
+        "model": {
+            "in_ch": model.IN_CH,
+            "img": model.IMG,
+            "classes": model.CLASSES,
+            "client_params": model.CLIENT_PARAM_NAMES,
+            "server_params": model.SERVER_PARAM_NAMES,
+        },
+        "train_batch": args.train_batch,
+        "eval_batch": args.eval_batch,
+        "seed": args.seed,
+        "entries": {},
+    }
+
+    for name, spec in entries.items():
+        text = lower_entry(name, spec)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": fname,
+            "inputs": [{"name": n, **s} for n, s in spec["inputs"]],
+            "outputs": [{"name": n, **s} for n, s in spec["outputs"]],
+        }
+        print(f"lowered {name}: {len(text)} chars -> {fname}")
+
+    manifest["init"] = write_init(args.out, args.seed)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['entries'])} entries")
+
+
+if __name__ == "__main__":
+    main()

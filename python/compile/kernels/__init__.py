@@ -1,0 +1,24 @@
+"""Layer-1 Pallas kernels for the SSFL/BSFL CNN hot path.
+
+Every kernel is written TPU-style (VMEM-sized blocks, matmul-shaped inner
+loops for the MXU) but executed with ``interpret=True`` so it lowers to
+plain HLO the CPU PJRT client can run.  ``ref.py`` holds the pure-jnp
+oracles each kernel is pytest-verified against.
+"""
+
+from .conv2d import conv2d
+from .conv2d_grad import conv2d_input_grad, conv2d_weight_grad
+from .maxpool import maxpool2x2
+from .maxpool_grad import maxpool2x2_grad
+from .dense import dense
+from .softmax_xent import softmax_xent
+
+__all__ = [
+    "conv2d",
+    "conv2d_input_grad",
+    "conv2d_weight_grad",
+    "maxpool2x2",
+    "maxpool2x2_grad",
+    "dense",
+    "softmax_xent",
+]

@@ -1,0 +1,104 @@
+"""Pallas 3x3 same-padding conv2d with fused bias + ReLU.
+
+TPU mapping of the paper's ``Conv2d(k=3, pad=1)`` layers (client conv
+``D -> 32`` and server conv ``32 -> 64``, Table II of the paper):
+
+* The convolution is expressed as **nine shifted matmuls** — for each tap
+  ``(di, dj)`` of the 3x3 stencil, a ``(nb*H*W, Cin) @ (Cin, Cout)``
+  product accumulated in VMEM.  Each product is exactly the shape the MXU
+  systolic array wants; there is no gather/scatter im2col materialisation
+  in HBM.
+* The batch dimension is tiled by ``BlockSpec`` (``block_n`` images per
+  grid step), so the HBM->VMEM schedule is the block grid, the way a CUDA
+  kernel would use its threadblock tiling.
+* Bias add and ReLU are fused into the same VMEM pass (no extra HBM
+  round-trip between conv and activation).
+
+VMEM footprint per grid step (f32):
+``block_n*(H+2)*(W+2)*Cin + 9*Cin*Cout + block_n*H*W*Cout`` — for the
+server conv at ``block_n=8, H=W=14, Cin=32, Cout=64``:
+8*16*16*32*4 + 9*32*64*4 + 8*14*14*64*4 = ~0.7 MB, far under the 16 MB
+VMEM budget; see DESIGN.md §Perf.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv3x3_kernel(x_ref, w_ref, b_ref, o_ref, *, height, width, relu):
+    """One grid step: conv a block of ``nb`` padded images.
+
+    x_ref: (nb, H+2, W+2, Cin) — already zero-padded input block
+    w_ref: (3, 3, Cin, Cout)
+    b_ref: (Cout,)
+    o_ref: (nb, H, W, Cout)
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    nb = x.shape[0]
+    cin = x.shape[-1]
+    cout = w.shape[-1]
+
+    acc = jnp.zeros((nb * height * width, cout), dtype=jnp.float32)
+    # Nine shifted matmuls == 3x3 conv; each is MXU-shaped.
+    for di in range(3):
+        for dj in range(3):
+            patch = x[:, di : di + height, dj : dj + width, :]
+            patch = patch.reshape(nb * height * width, cin)
+            acc = acc + jnp.dot(
+                patch, w[di, dj], preferred_element_type=jnp.float32
+            )
+    y = acc + b[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y.reshape(nb, height, width, cout)
+
+
+def conv2d(x, w, b, *, relu=True, block_n=32, interpret=True):
+    """3x3 same-padding convolution with fused bias (+ReLU).
+
+    Args:
+      x: (N, H, W, Cin) float32 input images (NHWC).
+      w: (3, 3, Cin, Cout) float32 filters.
+      b: (Cout,) float32 bias.
+      relu: fuse a ReLU after the bias add.
+      block_n: images per grid step (VMEM tile along the batch dim).
+      interpret: run the Pallas kernel in interpret mode (required on CPU).
+
+    Returns:
+      (N, H, W, Cout) float32.
+    """
+    n, height, width, cin = x.shape
+    assert w.shape[:3] == (3, 3, cin), f"bad filter shape {w.shape}"
+    cout = w.shape[-1]
+    block_n = math.gcd(n, min(block_n, n))
+
+    # SAME padding for the 3x3 stencil, done once in HBM; the kernel's
+    # BlockSpec then streams padded blocks into VMEM.
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+
+    kernel = functools.partial(
+        _conv3x3_kernel, height=height, width=width, relu=relu
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec(
+                (block_n, height + 2, width + 2, cin),
+                lambda i: (i, 0, 0, 0),
+            ),
+            pl.BlockSpec((3, 3, cin, cout), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec(
+            (block_n, height, width, cout), lambda i: (i, 0, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, height, width, cout), jnp.float32),
+        interpret=interpret,
+    )(xp, w, b)

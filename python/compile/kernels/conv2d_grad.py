@@ -1,0 +1,96 @@
+"""Pallas backward kernels for the 3x3 same-padding conv.
+
+The training step uses a manual VJP (DESIGN.md §3): rather than relying on
+autodiff through ``pallas_call`` (undefined for interpret-mode kernels),
+each backward contraction is its own MXU-shaped kernel:
+
+* **input gradient** — ``dX = conv(g, flip(W)^T)``: a full correlation of
+  the output cotangent with the spatially-flipped, channel-transposed
+  filter.  This is *exactly* another 3x3 same-conv, so it reuses
+  ``conv2d`` (relu off, zero bias) with the transformed weights; the
+  transform itself is a cheap HBM-side transpose XLA folds away.
+* **weight gradient** — ``dW[di,dj] = patch(di,dj)^T @ g``: nine
+  ``(Cin, N*H*W) x (N*H*W, Cout)`` products, one per stencil tap, computed
+  by ``conv2d_wgrad`` below with the tap index as the Pallas grid.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .conv2d import conv2d
+
+
+def conv2d_input_grad(g, w, *, block_n=32, interpret=True):
+    """Gradient of the 3x3 same-conv w.r.t. its input.
+
+    Args:
+      g: (N, H, W, Cout) float32 cotangent of the conv output
+         (pre-activation — apply the ReLU mask before calling).
+      w: (3, 3, Cin, Cout) float32 forward filters.
+
+    Returns:
+      dX: (N, H, W, Cin) float32.
+    """
+    # flip spatially, swap in/out channels -> another same-conv.
+    wt = jnp.transpose(w[::-1, ::-1, :, :], (0, 1, 3, 2))  # (3,3,Cout,Cin)
+    cin = w.shape[2]
+    zero_b = jnp.zeros((cin,), dtype=jnp.float32)
+    return conv2d(g, wt, zero_b, relu=False, block_n=block_n, interpret=interpret)
+
+
+def _wgrad_kernel(xp_ref, g_ref, o_ref, *, height, width):
+    """One grid step: the weight-gradient tap (di, dj).
+
+    xp_ref: (N, H+2, W+2, Cin) zero-padded forward input (whole batch)
+    g_ref:  (N, H, W, Cout) output cotangent (whole batch)
+    o_ref:  (1, 1, Cin, Cout) — this tap's slice of dW
+    """
+    di = pl.program_id(0)
+    dj = pl.program_id(1)
+    xp = xp_ref[...]
+    g = g_ref[...]
+    n = xp.shape[0]
+    cin = xp.shape[-1]
+    cout = g.shape[-1]
+
+    patch = jax.lax.dynamic_slice(
+        xp, (0, di, dj, 0), (n, height, width, cin)
+    ).reshape(n * height * width, cin)
+    gm = g.reshape(n * height * width, cout)
+    o_ref[...] = jnp.dot(
+        patch.T, gm, preferred_element_type=jnp.float32
+    ).reshape(1, 1, cin, cout)
+
+
+def conv2d_weight_grad(x, g, *, interpret=True):
+    """Gradient of the 3x3 same-conv w.r.t. its filters.
+
+    Args:
+      x: (N, H, W, Cin) float32 forward input.
+      g: (N, H, W, Cout) float32 cotangent of the conv output.
+
+    Returns:
+      dW: (3, 3, Cin, Cout) float32.
+    """
+    n, height, width, cin = x.shape
+    cout = g.shape[-1]
+    assert g.shape == (n, height, width, cout)
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+
+    kernel = functools.partial(_wgrad_kernel, height=height, width=width)
+    return pl.pallas_call(
+        kernel,
+        grid=(3, 3),
+        in_specs=[
+            pl.BlockSpec(
+                (n, height + 2, width + 2, cin), lambda i, j: (0, 0, 0, 0)
+            ),
+            pl.BlockSpec((n, height, width, cout), lambda i, j: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, cin, cout), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((3, 3, cin, cout), jnp.float32),
+        interpret=interpret,
+    )(xp, g)

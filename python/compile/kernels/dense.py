@@ -1,0 +1,63 @@
+"""Pallas tiled dense (fully-connected) layer: ``y = x @ w + b`` (+ReLU).
+
+Classic MXU tiling: the grid covers ``(M/bm, N/bn)`` output tiles; each
+grid step keeps an ``(bm, K)`` LHS stripe and a ``(K, bn)`` RHS stripe in
+VMEM and emits one ``(bm, bn)`` tile.  K is kept whole in VMEM because the
+paper's largest K is 3136 (server flatten -> fc128): a ``(32, 3136)`` +
+``(3136, 128)`` pair is ~2 MB f32, comfortably inside the 16 MB budget —
+so no K-loop / accumulator double-buffering is needed at these shapes.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, relu):
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def dense(x, w, b, *, relu=False, block_m=32, block_n=128, interpret=True):
+    """Fully-connected layer with fused bias (+ReLU).
+
+    Args:
+      x: (M, K) float32.
+      w: (K, N) float32.
+      b: (N,) float32.
+      relu: fuse a ReLU.
+      block_m / block_n: output tile sizes along M and N.
+      interpret: run the Pallas kernel in interpret mode (required on CPU).
+
+    Returns:
+      (M, N) float32.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {w.shape}"
+    # Snap tile sizes to divisors of the problem (gcd keeps them as close
+    # to the requested MXU-friendly tile as possible).
+    block_m = math.gcd(m, min(block_m, m))
+    block_n = math.gcd(n, min(block_n, n))
+
+    kernel = functools.partial(_dense_kernel, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, n // block_n),
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w, b)

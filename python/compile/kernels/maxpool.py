@@ -1,0 +1,48 @@
+"""Pallas 2x2 stride-2 max-pool.
+
+VPU-style elementwise/reduce kernel: each grid step pulls a block of
+images into VMEM, reshapes ``(nb, H/2, 2, W/2, 2, C)`` and reduces the two
+window axes with ``max``.  No matmul — this is bandwidth-bound, so the
+only thing that matters is that the block fits VMEM and the data is read
+exactly once (it is: one HBM read, one HBM write per element).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxpool_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    nb, h, w, c = x.shape
+    x = x.reshape(nb, h // 2, 2, w // 2, 2, c)
+    o_ref[...] = jnp.max(x, axis=(2, 4))
+
+
+def maxpool2x2(x, *, block_n=32, interpret=True):
+    """2x2 stride-2 max pooling.
+
+    Args:
+      x: (N, H, W, C) float32, H and W even.
+      block_n: images per grid step.
+      interpret: run the Pallas kernel in interpret mode (required on CPU).
+
+    Returns:
+      (N, H/2, W/2, C) float32.
+    """
+    n, h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0, f"odd spatial dims {x.shape}"
+    block_n = math.gcd(n, min(block_n, n))
+
+    return pl.pallas_call(
+        _maxpool_kernel,
+        grid=(n // block_n,),
+        in_specs=[pl.BlockSpec((block_n, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec(
+            (block_n, h // 2, w // 2, c), lambda i: (i, 0, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, h // 2, w // 2, c), jnp.float32),
+        interpret=interpret,
+    )(x)

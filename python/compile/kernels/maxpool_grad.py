@@ -1,0 +1,53 @@
+"""Pallas backward kernel for the 2x2 stride-2 max-pool.
+
+Distributes each pooled cotangent back to the argmax position(s) of its
+window.  Ties (multiple window elements equal to the max) split the
+cotangent evenly — with float activations ties are measure-zero, and the
+even split keeps the kernel a pure function of (x, g) so the forward needs
+to stash nothing.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxpool_bwd_kernel(x_ref, g_ref, o_ref):
+    x = x_ref[...]                    # (nb, H, W, C)
+    g = g_ref[...]                    # (nb, H/2, W/2, C)
+    nb, h, w, c = x.shape
+    xw = x.reshape(nb, h // 2, 2, w // 2, 2, c)
+    m = jnp.max(xw, axis=(2, 4), keepdims=True)
+    mask = (xw == m).astype(jnp.float32)
+    count = jnp.sum(mask, axis=(2, 4), keepdims=True)
+    gb = g.reshape(nb, h // 2, 1, w // 2, 1, c)
+    o_ref[...] = (mask * gb / count).reshape(nb, h, w, c)
+
+
+def maxpool2x2_grad(x, g, *, block_n=32, interpret=True):
+    """Gradient of 2x2/2 max-pool w.r.t. its input.
+
+    Args:
+      x: (N, H, W, C) float32 forward input.
+      g: (N, H/2, W/2, C) float32 cotangent of the pooled output.
+
+    Returns:
+      dX: (N, H, W, C) float32.
+    """
+    n, h, w, c = x.shape
+    assert g.shape == (n, h // 2, w // 2, c)
+    block_n = math.gcd(n, min(block_n, n))
+
+    return pl.pallas_call(
+        _maxpool_bwd_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, h, w, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((block_n, h // 2, w // 2, c), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, h, w, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h, w, c), jnp.float32),
+        interpret=interpret,
+    )(x, g)

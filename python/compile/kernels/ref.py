@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Layer-1 Pallas kernel.
+
+These are the correctness ground truth: deliberately written with stock
+``jax.lax`` / ``jnp`` ops (no Pallas), in the most obvious formulation, so
+a bug in a kernel cannot be mirrored here.  ``python/tests/test_kernels.py``
+asserts allclose between each kernel and its oracle across a hypothesis
+sweep of shapes and values.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x, w, b, *, relu=True):
+    """3x3 same-padding conv via lax.conv_general_dilated (NHWC/HWIO)."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    y = y + b[None, None, None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def maxpool2x2_ref(x):
+    """2x2 stride-2 max pooling via lax.reduce_window."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )
+
+
+def dense_ref(x, w, b, *, relu=False):
+    """Plain matmul + bias (+ReLU)."""
+    y = x @ w + b[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def softmax_xent_ref(logits, labels, weights):
+    """Weighted cross-entropy loss, gradient, and correctness indicator."""
+    c = logits.shape[-1]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, c, dtype=jnp.float32)
+    loss = -jnp.sum(logp * onehot, axis=-1) * weights
+    dlogits = (jax.nn.softmax(logits, axis=-1) - onehot) * weights[:, None]
+    correct = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    return loss, dlogits, correct * weights

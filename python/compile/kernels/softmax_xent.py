@@ -1,0 +1,83 @@
+"""Pallas fused softmax cross-entropy.
+
+One VMEM pass per batch block computes, for each row of logits:
+
+* the numerically-stable log-softmax (max / exp / sum / log),
+* the weighted per-example loss ``-w_i * log p_i[y_i]``,
+* the gradient ``d_logits = w_i * (softmax - onehot(y))`` (what the
+  server's backward pass needs — emitting it here saves recomputing the
+  softmax in the backward sweep), and
+* the weighted correct-prediction indicator (argmax == label).
+
+The per-example weight ``w_i`` is how padded tail batches are masked out
+(weight 0 contributes nothing to loss, gradient, or accuracy) — see
+DESIGN.md §5 (batch-size-specialized executables).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _xent_kernel(logits_ref, labels_ref, weights_ref, loss_ref, dlog_ref, corr_ref):
+    logits = logits_ref[...]          # (nb, C)
+    labels = labels_ref[...]          # (nb,) int32
+    weights = weights_ref[...]        # (nb,)
+    nb, c = logits.shape
+
+    zmax = jnp.max(logits, axis=-1, keepdims=True)
+    z = logits - zmax
+    ez = jnp.exp(z)
+    sez = jnp.sum(ez, axis=-1, keepdims=True)
+    logp = z - jnp.log(sez)           # log-softmax
+    p = ez / sez                      # softmax
+
+    onehot = (labels[:, None] == jnp.arange(c, dtype=jnp.int32)[None, :])
+    onehot = onehot.astype(jnp.float32)
+
+    loss_ref[...] = -jnp.sum(logp * onehot, axis=-1) * weights
+    dlog_ref[...] = (p - onehot) * weights[:, None]
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    corr_ref[...] = (pred == labels).astype(jnp.float32) * weights
+
+
+def softmax_xent(logits, labels, weights, *, block_n=32, interpret=True):
+    """Fused weighted softmax cross-entropy with gradient and accuracy.
+
+    Args:
+      logits: (N, C) float32.
+      labels: (N,) int32 class ids.
+      weights: (N,) float32 per-example weights (0 masks padding).
+      block_n: rows per grid step.
+      interpret: run the Pallas kernel in interpret mode (required on CPU).
+
+    Returns:
+      (loss, d_logits, correct): per-example weighted loss (N,), gradient
+      w.r.t. logits (N, C), weighted correct indicator (N,).
+    """
+    n, c = logits.shape
+    assert labels.shape == (n,) and weights.shape == (n,)
+    block_n = math.gcd(n, min(block_n, n))
+
+    return pl.pallas_call(
+        _xent_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, c), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n, c), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n, c), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(logits, labels, weights)

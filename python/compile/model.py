@@ -1,0 +1,344 @@
+"""Layer-2: the paper's split CNN (Table II) as JAX functions over the
+Layer-1 Pallas kernels, with a fully manual VJP.
+
+Model (Fashion-MNIST-shaped, D=1, H=W=28, 10 classes):
+
+* **client half** — Conv2d(D->32, 3x3, pad 1) + ReLU + MaxPool2x2
+  -> smashed activation ``A`` of shape (B, 14, 14, 32) (the paper's cut
+  layer).
+* **server half** — Conv2d(32->64) + ReLU + MaxPool2x2 + Flatten +
+  Linear(3136->128) + ReLU + Linear(128->10).
+
+Everything here is pure and positional so `aot.py` can lower each entry
+point to a single HLO module.  The backward pass is hand-derived (no
+`jax.grad` — interpret-mode `pallas_call` has no VJP) and itself runs on
+Pallas kernels for every matmul/conv/pool-shaped contraction; only
+bias-sum reductions and reshapes are left to stock XLA ops, which fuse.
+
+Entry points lowered by aot.py (see `entry_points()` at the bottom):
+
+* ``client_forward``    — the client's per-batch forward to the cut layer.
+* ``server_train_step`` — the shard server's fwd+bwd+SGD for one batch;
+  also emits ``dA`` (the "feedback gradient" the paper sends back to the
+  client, Algorithm 1 line 10).
+* ``client_backward``   — the client's backprop from ``dA`` + SGD.
+* ``evaluate``          — full-model loss/accuracy (committee scoring and
+  test evaluation, Algorithm 3 `Evaluate`).
+* ``full_train_step``   — fused client+server step (identical numerics to
+  the split path; used by the SL fast path and as a cross-check in tests).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import (
+    conv2d,
+    conv2d_input_grad,
+    conv2d_weight_grad,
+    dense,
+    maxpool2x2,
+    maxpool2x2_grad,
+    softmax_xent,
+)
+
+# ---------------------------------------------------------------------------
+# Model dimensions (paper Table II, Fashion-MNIST input)
+# ---------------------------------------------------------------------------
+
+IN_CH = 1          # D: input channels
+IMG = 28           # H = W
+C1 = 32            # client conv filters
+C2 = 64            # server conv filters
+FLAT = C2 * (IMG // 4) * (IMG // 4)   # 64 * 7 * 7 = 3136
+FC1 = 128
+CLASSES = 10
+
+TRAIN_BATCH = 32
+EVAL_BATCH = 256
+# Small-batch evaluate variant: committee scoring in BSFL evaluates many
+# small validation sets ((I-1)*J per member per cycle); padding those to
+# EVAL_BATCH wastes 4x compute.  See EXPERIMENTS.md §Perf.
+EVAL_BATCH_SMALL = 64
+
+# Manifest order — the Rust runtime packs weight bundles in exactly this
+# order.  Never reorder without regenerating artifacts.
+CLIENT_PARAM_NAMES = ["cw", "cb"]
+SERVER_PARAM_NAMES = ["sw", "sb", "f1w", "f1b", "f2w", "f2b"]
+
+
+def init_params(seed: int):
+    """He-normal init for both halves; returns (client, server) dicts of
+    np.float32 arrays in manifest order."""
+    rng = np.random.default_rng(seed)
+
+    def he(shape, fan_in):
+        return (rng.standard_normal(shape) * np.sqrt(2.0 / fan_in)).astype(
+            np.float32
+        )
+
+    client = {
+        "cw": he((3, 3, IN_CH, C1), 9 * IN_CH),
+        "cb": np.zeros((C1,), np.float32),
+    }
+    server = {
+        "sw": he((3, 3, C1, C2), 9 * C1),
+        "sb": np.zeros((C2,), np.float32),
+        "f1w": he((FLAT, FC1), FLAT),
+        "f1b": np.zeros((FC1,), np.float32),
+        "f2w": he((FC1, CLASSES), FC1),
+        "f2b": np.zeros((CLASSES,), np.float32),
+    }
+    return client, server
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def client_forward(cw, cb, x):
+    """Client half: x (B,28,28,D) -> smashed activation A (B,14,14,32)."""
+    c1 = conv2d(x, cw, cb, relu=True)
+    return maxpool2x2(c1)
+
+
+def _server_forward(sw, sb, f1w, f1b, f2w, f2b, a):
+    """Server half forward, returning intermediates for the manual VJP."""
+    z1 = conv2d(a, sw, sb, relu=True)        # (B,14,14,64), post-ReLU
+    p = maxpool2x2(z1)                       # (B,7,7,64)
+    flat = p.reshape(p.shape[0], FLAT)
+    h1 = dense(flat, f1w, f1b, relu=True)    # (B,128)
+    logits = dense(h1, f2w, f2b, relu=False) # (B,10)
+    return z1, flat, h1, logits
+
+
+def _zeros(n):
+    return jnp.zeros((n,), dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Training steps (manual VJP + SGD, all contractions on Pallas kernels)
+# ---------------------------------------------------------------------------
+
+def server_train_step(sw, sb, f1w, f1b, f2w, f2b, a, y, wts, lr):
+    """Shard-server step for one batch of smashed activations.
+
+    Args:
+      sw..f2b: server params.
+      a: (B,14,14,32) smashed activations from the client.
+      y: (B,) int32 labels (the paper's SFL sends labels with activations).
+      wts: (B,) 0/1 mask for padded examples.
+      lr: scalar learning rate.
+
+    Returns:
+      (loss_sum, correct_sum, wsum, dA, sw', sb', f1w', f1b', f2w', f2b')
+    """
+    z1, flat, h1, logits = _server_forward(sw, sb, f1w, f1b, f2w, f2b, a)
+    loss_vec, dlogits, corr_vec = softmax_xent(logits, y, wts)
+    loss_sum = jnp.sum(loss_vec)
+    correct_sum = jnp.sum(corr_vec)
+    wsum = jnp.sum(wts)
+
+    # Mean-loss gradient: scale the already-weighted dlogits by 1/wsum.
+    dl = dlogits / jnp.maximum(wsum, 1.0)
+
+    # fc2 backward
+    df2w = dense(h1.T, dl, _zeros(CLASSES))           # (128,10)
+    df2b = jnp.sum(dl, axis=0)
+    dh1 = dense(dl, f2w.T, _zeros(FC1))               # (B,128)
+    dh1 = dh1 * (h1 > 0.0)
+
+    # fc1 backward
+    df1w = dense(flat.T, dh1, _zeros(FC1))            # (3136,128)
+    df1b = jnp.sum(dh1, axis=0)
+    dflat = dense(dh1, f1w.T, _zeros(FLAT))           # (B,3136)
+
+    # pool + conv backward
+    dp = dflat.reshape(z1.shape[0], IMG // 4, IMG // 4, C2)
+    dz1 = maxpool2x2_grad(z1, dp)
+    dz1 = dz1 * (z1 > 0.0)
+    da = conv2d_input_grad(dz1, sw)                   # (B,14,14,32)
+    dsw = conv2d_weight_grad(a, dz1)
+    dsb = jnp.sum(dz1, axis=(0, 1, 2))
+
+    return (
+        loss_sum,
+        correct_sum,
+        wsum,
+        da,
+        sw - lr * dsw,
+        sb - lr * dsb,
+        f1w - lr * df1w,
+        f1b - lr * df1b,
+        f2w - lr * df2w,
+        f2b - lr * df2b,
+    )
+
+
+def client_backward(cw, cb, x, da, lr):
+    """Client backprop from the server's feedback gradient ``dA`` + SGD.
+
+    The client recomputes its (cheap) forward rather than stashing
+    activations — the paper's clients are stateless between messages.
+    """
+    c1 = conv2d(x, cw, cb, relu=True)                 # (B,28,28,32)
+    dc1 = maxpool2x2_grad(c1, da)
+    dc1 = dc1 * (c1 > 0.0)
+    dcw = conv2d_weight_grad(x, dc1)
+    dcb = jnp.sum(dc1, axis=(0, 1, 2))
+    return cw - lr * dcw, cb - lr * dcb
+
+
+def evaluate(cw, cb, sw, sb, f1w, f1b, f2w, f2b, x, y, wts):
+    """Full-model evaluation: (loss_sum, correct_sum, wsum) over a batch."""
+    a = client_forward(cw, cb, x)
+    _, _, _, logits = _server_forward(sw, sb, f1w, f1b, f2w, f2b, a)
+    loss_vec, _, corr_vec = softmax_xent(logits, y, wts)
+    return jnp.sum(loss_vec), jnp.sum(corr_vec), jnp.sum(wts)
+
+
+def full_train_step(cw, cb, sw, sb, f1w, f1b, f2w, f2b, x, y, wts, lr):
+    """Fused client+server train step (identical numerics to the split
+    path — proven by python/tests/test_model.py::test_split_equals_fused).
+
+    Returns:
+      (loss_sum, correct_sum, wsum, cw', cb', sw', sb', f1w', f1b',
+       f2w', f2b')
+    """
+    a = client_forward(cw, cb, x)
+    (
+        loss_sum,
+        correct_sum,
+        wsum,
+        da,
+        sw2,
+        sb2,
+        f1w2,
+        f1b2,
+        f2w2,
+        f2b2,
+    ) = server_train_step(sw, sb, f1w, f1b, f2w, f2b, a, y, wts, lr)
+    cw2, cb2 = client_backward(cw, cb, x, da, lr)
+    return (
+        loss_sum,
+        correct_sum,
+        wsum,
+        cw2,
+        cb2,
+        sw2,
+        sb2,
+        f1w2,
+        f1b2,
+        f2w2,
+        f2b2,
+    )
+
+
+# ---------------------------------------------------------------------------
+# AOT entry-point registry (consumed by aot.py)
+# ---------------------------------------------------------------------------
+
+def _s(*shape):
+    return {"shape": list(shape), "dtype": "f32"}
+
+
+def _si(*shape):
+    return {"shape": list(shape), "dtype": "s32"}
+
+
+def entry_points(train_b=TRAIN_BATCH, eval_b=EVAL_BATCH, eval_b_small=EVAL_BATCH_SMALL):
+    """Build the lowering manifest: name -> (fn, input specs, output specs).
+
+    Input/output specs are ordered; the Rust runtime mirrors this order
+    exactly when packing literals.
+    """
+    B, EB = train_b, eval_b
+    client_shapes = [("cw", _s(3, 3, IN_CH, C1)), ("cb", _s(C1))]
+    server_shapes = [
+        ("sw", _s(3, 3, C1, C2)),
+        ("sb", _s(C2)),
+        ("f1w", _s(FLAT, FC1)),
+        ("f1b", _s(FC1)),
+        ("f2w", _s(FC1, CLASSES)),
+        ("f2b", _s(CLASSES)),
+    ]
+    return {
+        "client_forward": {
+            "fn": client_forward,
+            "inputs": client_shapes + [("x", _s(B, IMG, IMG, IN_CH))],
+            "outputs": [("a", _s(B, IMG // 2, IMG // 2, C1))],
+        },
+        "server_train_step": {
+            "fn": server_train_step,
+            "inputs": server_shapes
+            + [
+                ("a", _s(B, IMG // 2, IMG // 2, C1)),
+                ("y", _si(B)),
+                ("wts", _s(B)),
+                ("lr", _s()),
+            ],
+            "outputs": [
+                ("loss_sum", _s()),
+                ("correct_sum", _s()),
+                ("wsum", _s()),
+                ("da", _s(B, IMG // 2, IMG // 2, C1)),
+            ]
+            + [(n + "_new", s) for n, s in server_shapes],
+        },
+        "client_backward": {
+            "fn": client_backward,
+            "inputs": client_shapes
+            + [
+                ("x", _s(B, IMG, IMG, IN_CH)),
+                ("da", _s(B, IMG // 2, IMG // 2, C1)),
+                ("lr", _s()),
+            ],
+            "outputs": [(n + "_new", s) for n, s in client_shapes],
+        },
+        "evaluate": {
+            "fn": evaluate,
+            "inputs": client_shapes
+            + server_shapes
+            + [
+                ("x", _s(EB, IMG, IMG, IN_CH)),
+                ("y", _si(EB)),
+                ("wts", _s(EB)),
+            ],
+            "outputs": [
+                ("loss_sum", _s()),
+                ("correct_sum", _s()),
+                ("wsum", _s()),
+            ],
+        },
+        "evaluate_small": {
+            "fn": evaluate,
+            "inputs": client_shapes
+            + server_shapes
+            + [
+                ("x", _s(eval_b_small, IMG, IMG, IN_CH)),
+                ("y", _si(eval_b_small)),
+                ("wts", _s(eval_b_small)),
+            ],
+            "outputs": [
+                ("loss_sum", _s()),
+                ("correct_sum", _s()),
+                ("wsum", _s()),
+            ],
+        },
+        "full_train_step": {
+            "fn": full_train_step,
+            "inputs": client_shapes
+            + server_shapes
+            + [
+                ("x", _s(B, IMG, IMG, IN_CH)),
+                ("y", _si(B)),
+                ("wts", _s(B)),
+                ("lr", _s()),
+            ],
+            "outputs": [
+                ("loss_sum", _s()),
+                ("correct_sum", _s()),
+                ("wsum", _s()),
+            ]
+            + [(n + "_new", s) for n, s in client_shapes + server_shapes],
+        },
+    }

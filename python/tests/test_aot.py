@@ -1,0 +1,79 @@
+"""AOT export: HLO text round-trip validity + manifest integrity.
+
+These tests exercise the exact interchange path Rust consumes — if they
+pass, `HloModuleProto::from_text_file` on the Rust side sees well-formed
+modules with the manifest's shapes.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lower_entry_produces_hlo_text():
+    eps = model.entry_points(train_b=4, eval_b=8)
+    text = aot.lower_entry("client_forward", eps["client_forward"])
+    assert "HloModule" in text
+    assert "ENTRY" in text
+
+
+def test_lowered_hlo_parameter_count_matches_manifest():
+    eps = model.entry_points(train_b=4, eval_b=8)
+    for name, spec in eps.items():
+        text = aot.lower_entry(name, spec)
+        # Every manifest input appears as a parameter of the ENTRY
+        # computation (nested computations have their own parameters).
+        entry = text[text.index("ENTRY") :]
+        entry = entry[: entry.index("\n}")]
+        n_params = entry.count("parameter(")
+        assert n_params == len(spec["inputs"]), (name, n_params)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_manifest_consistent_with_model():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["model"]["client_params"] == model.CLIENT_PARAM_NAMES
+    assert man["model"]["server_params"] == model.SERVER_PARAM_NAMES
+    eps = model.entry_points(man["train_batch"], man["eval_batch"])
+    assert set(man["entries"]) == set(eps)
+    for name, entry in man["entries"].items():
+        path = os.path.join(ARTIFACTS, entry["file"])
+        assert os.path.exists(path), path
+        want_inputs = [
+            {"name": n, **s} for n, s in eps[name]["inputs"]
+        ]
+        assert entry["inputs"] == want_inputs, name
+    # init weights exist and have the right element counts
+    for key, info in man["init"].items():
+        path = os.path.join(ARTIFACTS, info["file"])
+        n = np.prod(info["shape"]) if info["shape"] else 1
+        assert os.path.getsize(path) == 4 * n, key
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_init_weights_match_seeded_init():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        man = json.load(f)
+    client, server = model.init_params(man["seed"])
+    for group, params in (("client", client), ("server", server)):
+        for pname, arr in params.items():
+            info = man["init"][f"{group}.{pname}"]
+            got = np.fromfile(
+                os.path.join(ARTIFACTS, info["file"]), dtype="<f4"
+            ).reshape(info["shape"])
+            np.testing.assert_array_equal(got, arr)

@@ -1,0 +1,247 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Fixed-shape exact checks plus hypothesis sweeps over shapes/batches —
+the CORE correctness signal for the compute layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    conv2d,
+    conv2d_input_grad,
+    conv2d_weight_grad,
+    dense,
+    maxpool2x2,
+    maxpool2x2_grad,
+    softmax_xent,
+)
+from compile.kernels import ref
+
+SETTINGS = dict(deadline=None, max_examples=8, derandomize=True)
+
+
+def _rnd(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# conv2d forward
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("relu", [True, False])
+@pytest.mark.parametrize("block_n", [1, 4, 8])
+def test_conv2d_matches_ref(relu, block_n):
+    rng = np.random.default_rng(0)
+    x = _rnd(rng, 8, 14, 14, 32)
+    w = _rnd(rng, 3, 3, 32, 64, scale=0.1)
+    b = _rnd(rng, 64, scale=0.1)
+    got = conv2d(x, w, b, relu=relu, block_n=block_n)
+    want = ref.conv2d_ref(x, w, b, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([1, 2, 3, 4, 6]),
+    hw=st.sampled_from([4, 8, 14, 28]),
+    cin=st.sampled_from([1, 3, 8, 32]),
+    cout=st.sampled_from([4, 16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_conv2d_shape_sweep(n, hw, cin, cout, seed):
+    rng = np.random.default_rng(seed)
+    x = _rnd(rng, n, hw, hw, cin)
+    w = _rnd(rng, 3, 3, cin, cout, scale=0.2)
+    b = _rnd(rng, cout, scale=0.2)
+    got = conv2d(x, w, b, relu=True, block_n=4)
+    want = ref.conv2d_ref(x, w, b, relu=True)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# conv2d backward
+# ---------------------------------------------------------------------------
+
+def test_conv2d_input_grad_matches_autodiff():
+    rng = np.random.default_rng(1)
+    x = _rnd(rng, 4, 14, 14, 32)
+    w = _rnd(rng, 3, 3, 32, 64, scale=0.05)
+    b = jnp.zeros((64,), jnp.float32)
+    g = _rnd(rng, 4, 14, 14, 64)
+    f = lambda x_: jnp.sum(ref.conv2d_ref(x_, w, b, relu=False) * g)
+    want = jax.grad(f)(x)
+    got = conv2d_input_grad(g, w, block_n=4)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_weight_grad_matches_autodiff():
+    rng = np.random.default_rng(2)
+    x = _rnd(rng, 4, 14, 14, 32)
+    w = _rnd(rng, 3, 3, 32, 64, scale=0.05)
+    b = jnp.zeros((64,), jnp.float32)
+    g = _rnd(rng, 4, 14, 14, 64)
+    f = lambda w_: jnp.sum(ref.conv2d_ref(x, w_, b, relu=False) * g)
+    want = jax.grad(f)(w)
+    got = conv2d_weight_grad(x, g)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([1, 2, 4]),
+    hw=st.sampled_from([4, 8, 14]),
+    cin=st.sampled_from([1, 8, 16]),
+    cout=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_conv2d_grads_sweep(n, hw, cin, cout, seed):
+    rng = np.random.default_rng(seed)
+    x = _rnd(rng, n, hw, hw, cin)
+    w = _rnd(rng, 3, 3, cin, cout, scale=0.1)
+    b = jnp.zeros((cout,), jnp.float32)
+    g = _rnd(rng, n, hw, hw, cout)
+    f = lambda x_, w_: jnp.sum(ref.conv2d_ref(x_, w_, b, relu=False) * g)
+    want_dx, want_dw = jax.grad(f, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(
+        conv2d_input_grad(g, w, block_n=2), want_dx, rtol=1e-3, atol=1e-3
+    )
+    np.testing.assert_allclose(
+        conv2d_weight_grad(x, g), want_dw, rtol=1e-3, atol=1e-3
+    )
+
+
+# ---------------------------------------------------------------------------
+# maxpool
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([1, 2, 4, 8]),
+    hw=st.sampled_from([4, 8, 14, 28]),
+    c=st.sampled_from([1, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_maxpool_matches_ref(n, hw, c, seed):
+    rng = np.random.default_rng(seed)
+    x = _rnd(rng, n, hw, hw, c)
+    got = maxpool2x2(x, block_n=4)
+    want = ref.maxpool2x2_ref(x)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_maxpool_grad_matches_autodiff():
+    rng = np.random.default_rng(3)
+    x = _rnd(rng, 4, 28, 28, 32)
+    g = _rnd(rng, 4, 14, 14, 32)
+    f = lambda x_: jnp.sum(ref.maxpool2x2_ref(x_) * g)
+    want = jax.grad(f)(x)
+    got = maxpool2x2_grad(x, g, block_n=4)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_maxpool_grad_tie_splitting():
+    # all-equal window: cotangent splits evenly across the 4 positions
+    x = jnp.ones((1, 2, 2, 1), jnp.float32)
+    g = jnp.ones((1, 1, 1, 1), jnp.float32)
+    got = maxpool2x2_grad(x, g)
+    np.testing.assert_allclose(got, 0.25 * np.ones((1, 2, 2, 1)), rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("relu", [True, False])
+def test_dense_matches_ref(relu):
+    rng = np.random.default_rng(4)
+    x = _rnd(rng, 32, 3136, scale=0.1)
+    w = _rnd(rng, 3136, 128, scale=0.02)
+    b = _rnd(rng, 128)
+    got = dense(x, w, b, relu=relu)
+    want = ref.dense_ref(x, w, b, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([1, 7, 32, 50]),
+    k=st.sampled_from([3, 10, 128, 257]),
+    n=st.sampled_from([1, 10, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_dense_shape_sweep(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rnd(rng, m, k, scale=0.2)
+    w = _rnd(rng, k, n, scale=0.2)
+    b = _rnd(rng, n)
+    got = dense(x, w, b)
+    want = ref.dense_ref(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# softmax cross-entropy
+# ---------------------------------------------------------------------------
+
+def test_softmax_xent_matches_ref():
+    rng = np.random.default_rng(5)
+    logits = _rnd(rng, 32, 10, scale=3.0)
+    labels = jnp.asarray(rng.integers(0, 10, size=32).astype(np.int32))
+    wts = jnp.ones((32,), jnp.float32)
+    got = softmax_xent(logits, labels, wts)
+    want = ref.softmax_xent_ref(logits, labels, wts)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_xent_grad_matches_autodiff():
+    rng = np.random.default_rng(6)
+    logits = _rnd(rng, 16, 10, scale=2.0)
+    labels = jnp.asarray(rng.integers(0, 10, size=16).astype(np.int32))
+    wts = jnp.ones((16,), jnp.float32)
+
+    def mean_loss(lg):
+        logp = jax.nn.log_softmax(lg)
+        oh = jax.nn.one_hot(labels, 10, dtype=jnp.float32)
+        return jnp.sum(-jnp.sum(logp * oh, axis=-1) * wts)
+
+    want = jax.grad(mean_loss)(logits)
+    _, dlogits, _ = softmax_xent(logits, labels, wts)
+    np.testing.assert_allclose(dlogits, want, rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_xent_padding_mask():
+    """weight 0 rows contribute nothing to loss, grad, or accuracy."""
+    rng = np.random.default_rng(7)
+    logits = _rnd(rng, 8, 10, scale=2.0)
+    labels = jnp.asarray(rng.integers(0, 10, size=8).astype(np.int32))
+    wts = jnp.asarray([1, 1, 1, 1, 0, 0, 0, 0], dtype=jnp.float32)
+    loss, dlogits, corr = softmax_xent(logits, labels, wts)
+    assert float(jnp.sum(jnp.abs(loss[4:]))) == 0.0
+    assert float(jnp.sum(jnp.abs(dlogits[4:]))) == 0.0
+    assert float(jnp.sum(jnp.abs(corr[4:]))) == 0.0
+    # and the kept rows match an unmasked 4-row evaluation
+    l2, d2, c2 = softmax_xent(logits[:4], labels[:4], wts[:4])
+    np.testing.assert_allclose(loss[:4], l2, rtol=1e-6)
+    np.testing.assert_allclose(dlogits[:4], d2, rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([1, 2, 16, 32]),
+    c=st.sampled_from([2, 10, 17]),
+    seed=st.integers(0, 2**16),
+)
+def test_softmax_xent_sweep(n, c, seed):
+    rng = np.random.default_rng(seed)
+    logits = _rnd(rng, n, c, scale=4.0)
+    labels = jnp.asarray(rng.integers(0, c, size=n).astype(np.int32))
+    wts = jnp.asarray(rng.integers(0, 2, size=n).astype(np.float32))
+    got = softmax_xent(logits, labels, wts)
+    want = ref.softmax_xent_ref(logits, labels, wts)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,144 @@
+"""L2 correctness: split-vs-fused equivalence, autodiff cross-check of the
+manual VJP, and learning sanity on a separable toy task."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _batch(rng, b=8):
+    x = jnp.asarray(rng.normal(size=(b, 28, 28, 1)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, size=b).astype(np.int32))
+    wts = jnp.ones((b,), jnp.float32)
+    return x, y, wts
+
+
+def _params(seed=0):
+    c, s = model.init_params(seed)
+    c = {k: jnp.asarray(v) for k, v in c.items()}
+    s = {k: jnp.asarray(v) for k, v in s.items()}
+    return c, s
+
+
+def _ref_loss(c, s, x, y, wts):
+    """The whole split model re-expressed with stock jax ops only."""
+    a = ref.maxpool2x2_ref(ref.conv2d_ref(x, c["cw"], c["cb"], relu=True))
+    z1 = ref.conv2d_ref(a, s["sw"], s["sb"], relu=True)
+    p = ref.maxpool2x2_ref(z1)
+    flat = p.reshape(p.shape[0], model.FLAT)
+    h1 = ref.dense_ref(flat, s["f1w"], s["f1b"], relu=True)
+    logits = ref.dense_ref(h1, s["f2w"], s["f2b"])
+    logp = jax.nn.log_softmax(logits)
+    oh = jax.nn.one_hot(y, model.CLASSES, dtype=jnp.float32)
+    per_ex = -jnp.sum(logp * oh, axis=-1) * wts
+    return jnp.sum(per_ex) / jnp.maximum(jnp.sum(wts), 1.0)
+
+
+def test_split_equals_fused():
+    """client_forward + server_train_step + client_backward must produce
+    bit-identical updates to full_train_step."""
+    rng = np.random.default_rng(10)
+    c, s = _params(1)
+    x, y, wts = _batch(rng, 32)
+    lr = jnp.float32(0.05)
+
+    a = model.client_forward(c["cw"], c["cb"], x)
+    out = model.server_train_step(
+        s["sw"], s["sb"], s["f1w"], s["f1b"], s["f2w"], s["f2b"],
+        a, y, wts, lr,
+    )
+    loss_s, corr_s, wsum_s, da = out[0], out[1], out[2], out[3]
+    s_new_split = out[4:]
+    cw2, cb2 = model.client_backward(c["cw"], c["cb"], x, da, lr)
+
+    fused = model.full_train_step(
+        c["cw"], c["cb"], s["sw"], s["sb"], s["f1w"], s["f1b"],
+        s["f2w"], s["f2b"], x, y, wts, lr,
+    )
+    np.testing.assert_array_equal(np.asarray(loss_s), np.asarray(fused[0]))
+    np.testing.assert_array_equal(np.asarray(cw2), np.asarray(fused[3]))
+    np.testing.assert_array_equal(np.asarray(cb2), np.asarray(fused[4]))
+    for got, want in zip(s_new_split, fused[5:]):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_manual_vjp_matches_autodiff():
+    """The hand-derived backward equals jax.grad of the reference model on
+    every parameter tensor."""
+    rng = np.random.default_rng(11)
+    c, s = _params(2)
+    x, y, wts = _batch(rng, 8)
+    lr = jnp.float32(1.0)  # updates == old - grads, so grads = old - new
+
+    grads_c, grads_s = jax.grad(_ref_loss, argnums=(0, 1))(c, s, x, y, wts)
+
+    out = model.full_train_step(
+        c["cw"], c["cb"], s["sw"], s["sb"], s["f1w"], s["f1b"],
+        s["f2w"], s["f2b"], x, y, wts, lr,
+    )
+    new = dict(zip(["cw", "cb", "sw", "sb", "f1w", "f1b", "f2w", "f2b"], out[3:]))
+    for name, old in {**c, **s}.items():
+        got = np.asarray(old - new[name])
+        want = np.asarray(grads_c[name] if name in c else grads_s[name])
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-5, err_msg=name)
+
+
+def test_loss_decreases_on_toy_task():
+    """A few SGD steps on a fixed batch must reduce the loss."""
+    rng = np.random.default_rng(12)
+    c, s = _params(3)
+    x, y, wts = _batch(rng, 32)
+    lr = jnp.float32(0.05)
+    params = [c["cw"], c["cb"], s["sw"], s["sb"], s["f1w"], s["f1b"], s["f2w"], s["f2b"]]
+    losses = []
+    for _ in range(6):
+        out = model.full_train_step(*params, x, y, wts, lr)
+        losses.append(float(out[0]) / float(out[2]))
+        params = list(out[3:])
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_evaluate_consistency():
+    """evaluate() loss equals the reference loss on the same params."""
+    rng = np.random.default_rng(13)
+    c, s = _params(4)
+    b = model.EVAL_BATCH
+    x = jnp.asarray(rng.normal(size=(b, 28, 28, 1)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, size=b).astype(np.int32))
+    wts = jnp.ones((b,), jnp.float32)
+    loss_sum, corr_sum, wsum = model.evaluate(
+        c["cw"], c["cb"], s["sw"], s["sb"], s["f1w"], s["f1b"],
+        s["f2w"], s["f2b"], x, y, wts,
+    )
+    want = _ref_loss(c, s, x, y, wts)
+    np.testing.assert_allclose(float(loss_sum) / float(wsum), float(want), rtol=1e-4)
+    assert 0.0 <= float(corr_sum) <= b
+
+
+def test_init_params_deterministic():
+    c1, s1 = model.init_params(42)
+    c2, s2 = model.init_params(42)
+    c3, _ = model.init_params(43)
+    for k in c1:
+        np.testing.assert_array_equal(c1[k], c2[k])
+    assert not np.array_equal(c1["cw"], c3["cw"])
+
+
+def test_entry_point_specs_are_consistent():
+    """Manifest shapes must match what the functions actually produce."""
+    eps = model.entry_points(train_b=8, eval_b=16)
+    for name, spec in eps.items():
+        args = [
+            jnp.zeros(tuple(s["shape"]), jnp.float32 if s["dtype"] == "f32" else jnp.int32)
+            for _, s in spec["inputs"]
+        ]
+        out = spec["fn"](*args)
+        if not isinstance(out, tuple):
+            out = (out,)
+        assert len(out) == len(spec["outputs"]), name
+        for o, (oname, ospec) in zip(out, spec["outputs"]):
+            assert tuple(o.shape) == tuple(ospec["shape"]), (name, oname)

@@ -1,0 +1,121 @@
+//! Model aggregation: FedAvg and its weighted / top-K variants.
+//!
+//! SFL/SSFL aggregate with plain FedAvg (paper Algorithm 1 lines 13-14,
+//! 26-28); BSFL aggregates only the committee-selected top-K updates
+//! (Algorithm 3 lines 44-47).
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Bundle;
+
+/// Unweighted FedAvg: the element-wise mean of structurally-identical
+/// bundles.
+pub fn fedavg(bundles: &[&Bundle]) -> Result<Bundle> {
+    if bundles.is_empty() {
+        bail!("fedavg over zero bundles");
+    }
+    let mut acc = bundles[0].zeros_like();
+    for b in bundles {
+        acc.axpy(1.0, b)?;
+    }
+    acc.scale(1.0 / bundles.len() as f32);
+    Ok(acc)
+}
+
+/// Weighted FedAvg (weights need not sum to 1; they are normalized).
+/// Used when local dataset sizes differ.
+pub fn fedavg_weighted(bundles: &[&Bundle], weights: &[f64]) -> Result<Bundle> {
+    if bundles.is_empty() || bundles.len() != weights.len() {
+        bail!(
+            "fedavg_weighted: {} bundles vs {} weights",
+            bundles.len(),
+            weights.len()
+        );
+    }
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 {
+        bail!("fedavg_weighted: non-positive total weight");
+    }
+    let mut acc = bundles[0].zeros_like();
+    for (b, &w) in bundles.iter().zip(weights.iter()) {
+        if w < 0.0 {
+            bail!("negative weight");
+        }
+        acc.axpy((w / total) as f32, b)?;
+    }
+    Ok(acc)
+}
+
+/// BSFL top-K aggregation: mean of the winner subset only.
+pub fn topk_mean(bundles: &[&Bundle], winners: &[usize]) -> Result<Bundle> {
+    if winners.is_empty() {
+        bail!("topk_mean with zero winners");
+    }
+    let picked: Vec<&Bundle> = winners
+        .iter()
+        .map(|&i| {
+            bundles
+                .get(i)
+                .copied()
+                .ok_or_else(|| anyhow::anyhow!("winner index {i} out of range"))
+        })
+        .collect::<Result<_>>()?;
+    fedavg(&picked)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn bundle(vals: &[f32]) -> Bundle {
+        Bundle::new(
+            vec!["w".into()],
+            vec![Tensor::new(vec![vals.len()], vals.to_vec()).unwrap()],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn fedavg_means() {
+        let a = bundle(&[1.0, 2.0]);
+        let b = bundle(&[3.0, 6.0]);
+        let m = fedavg(&[&a, &b]).unwrap();
+        assert_eq!(m.tensors()[0].data(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn fedavg_identity_for_single() {
+        let a = bundle(&[1.5, -2.0]);
+        let m = fedavg(&[&a]).unwrap();
+        assert_eq!(&m, &a);
+    }
+
+    #[test]
+    fn weighted_normalizes() {
+        let a = bundle(&[0.0]);
+        let b = bundle(&[10.0]);
+        let m = fedavg_weighted(&[&a, &b], &[1.0, 3.0]).unwrap();
+        assert!((m.tensors()[0].data()[0] - 7.5).abs() < 1e-6);
+        assert!(fedavg_weighted(&[&a], &[0.0]).is_err());
+        assert!(fedavg_weighted(&[&a, &b], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn topk_selects_subset() {
+        let a = bundle(&[1.0]);
+        let b = bundle(&[100.0]); // poisoned outlier
+        let c = bundle(&[3.0]);
+        let m = topk_mean(&[&a, &b, &c], &[0, 2]).unwrap();
+        assert_eq!(m.tensors()[0].data(), &[2.0]);
+        assert!(topk_mean(&[&a], &[5]).is_err());
+        assert!(topk_mean(&[&a], &[]).is_err());
+    }
+
+    #[test]
+    fn fedavg_structure_mismatch_errors() {
+        let a = bundle(&[1.0]);
+        let b = bundle(&[1.0, 2.0]);
+        assert!(fedavg(&[&a, &b]).is_err());
+    }
+}

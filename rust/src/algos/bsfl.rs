@@ -1,0 +1,305 @@
+//! Blockchain-enabled SplitFed Learning — the paper's second
+//! contribution (Algorithm 3).
+//!
+//! The FL server is gone: per cycle, `AssignNodes` elects a committee of
+//! shard servers (random at t=1, score-based with rotation afterwards),
+//! the shards run SFL rounds, everyone posts models to the ledger via
+//! `ModelPropose`, committee members cross-evaluate every other shard on
+//! their own local validation data, the median of posted scores becomes
+//! each shard's final score, and `EvaluationPropose` aggregates only the
+//! top-K shards into the next globals.
+//!
+//! Under data poisoning, shards containing label-flipped clients score
+//! poorly on honest validators' data and never enter the aggregation —
+//! this is the whole defense, and the reason the paper's Table III shows
+//! BSFL flat under attack while SL/SFL/SSFL collapse.
+
+use anyhow::Result;
+
+use crate::aggregation::{fedavg, topk_mean};
+use crate::attack::invert_scores;
+use crate::blockchain::{
+    select_top_k, AssignNodes, Chain, EvaluationPropose, ModelPropose, ModelStore,
+    Transaction,
+};
+use crate::config::{Election, ExpConfig};
+use crate::data::Dataset;
+use crate::metrics::RunResult;
+use crate::netsim::{self, MsgKind};
+use crate::nodes::Node;
+use crate::runtime::{ModelOps, StepStats};
+use crate::tensor::Bundle;
+
+use super::common::{
+    finish_run, make_nodes, push_round_record, run_shard_round, EarlyStop, TrainCtx,
+};
+
+/// Everything a BSFL run leaves behind for inspection (ledger audits,
+/// committee ablations, tests).
+pub struct BsflArtifacts {
+    pub chain: Chain,
+    pub store: ModelStore,
+    /// Per-cycle winner shard ids.
+    pub winners_per_cycle: Vec<Vec<usize>>,
+    /// Per-cycle committees (node ids).
+    pub committees: Vec<Vec<usize>>,
+    /// Per-cycle full assignments (committee + shard clients).
+    pub assignments: Vec<crate::blockchain::committee::Assignment>,
+}
+
+pub fn run(
+    cfg: &ExpConfig,
+    ops: &ModelOps<'_>,
+    corpus: &Dataset,
+    valset: &Dataset,
+    testset: &Dataset,
+) -> Result<RunResult> {
+    let mut ctx = TrainCtx::new(cfg, ops)?;
+    run_with_ctx(&mut ctx, corpus, valset, testset).map(|(r, _)| r)
+}
+
+pub fn run_with_ctx(
+    ctx: &mut TrainCtx<'_>,
+    corpus: &Dataset,
+    valset: &Dataset,
+    testset: &Dataset,
+) -> Result<(RunResult, BsflArtifacts)> {
+    let cfg = ctx.cfg;
+    let nodes = make_nodes(cfg, corpus);
+    let mut chain = Chain::new();
+    let mut store = ModelStore::new();
+
+    let (mut client_global, mut server_global) = ctx.ops.init_models()?;
+    // The paper initializes the globals ON the blockchain (§V): their
+    // digests form the first aggregation record.
+    let g_server = store.put(server_global.clone());
+    let g_client = store.put(client_global.clone());
+    let mut vtime = 0.0f64;
+    chain.append(
+        vtime,
+        vec![Transaction::Aggregation {
+            cycle: 0,
+            winners: vec![],
+            final_scores: vec![],
+            global_server: g_server,
+            global_client: g_client,
+        }],
+    );
+
+    let mut records = Vec::with_capacity(cfg.rounds);
+    let mut stop = EarlyStop::new(cfg.patience);
+    let mut stopped_early = false;
+    let mut node_scores = vec![f64::INFINITY; cfg.nodes];
+    let mut prev_committee: Vec<usize> = Vec::new();
+    let mut winners_per_cycle = Vec::new();
+    let mut committees = Vec::new();
+    let mut assignments = Vec::new();
+
+    for cycle in 0..cfg.rounds {
+        let blocks_before = chain.len();
+
+        // ---- AssignNodes -------------------------------------------------
+        let random = cycle == 0 || cfg.election == Election::Random;
+        let assignment = AssignNodes::execute(
+            &mut chain,
+            vtime,
+            cycle,
+            cfg.nodes,
+            cfg.shards,
+            cfg.clients_per_shard,
+            &prev_committee,
+            &node_scores,
+            random,
+            &mut ctx.rng,
+        )?;
+        committees.push(assignment.committee.clone());
+        assignments.push(assignment.clone());
+
+        // ---- shard training (parallel in virtual time) ---------------------
+        let mut shard_servers: Vec<Bundle> = Vec::with_capacity(cfg.shards);
+        let mut shard_client_models: Vec<Vec<Bundle>> = Vec::with_capacity(cfg.shards);
+        let mut shard_times = Vec::with_capacity(cfg.shards);
+        let mut stats = StepStats::default();
+        for shard in 0..cfg.shards {
+            let members: Vec<&Node> = assignment.clients[shard]
+                .iter()
+                .map(|&id| &nodes[id])
+                .collect();
+            let mut server_i = server_global.clone();
+            let mut client_models = vec![client_global.clone(); members.len()];
+            let mut t_shard = 0.0;
+            for _ in 0..cfg.inner_rounds {
+                let (new_server, st, t) =
+                    run_shard_round(ctx, &server_i, &mut client_models, &members)?;
+                server_i = new_server;
+                stats.merge(st);
+                t_shard += t;
+            }
+            shard_servers.push(server_i);
+            shard_client_models.push(client_models);
+            shard_times.push(t_shard);
+        }
+        let train_s = netsim::parallel(&shard_times);
+
+        // ---- ModelPropose --------------------------------------------------
+        // model uploads to the ledger's store cross org boundaries (WAN);
+        // shards upload in parallel, clients within a shard serially
+        // through their server's link.
+        let mut propose_s: f64 = 0.0;
+        for shard in 0..cfg.shards {
+            let server_node = assignment.committee[shard];
+            let d = store.put(shard_servers[shard].clone());
+            let bytes = shard_servers[shard].wire_bytes();
+            ModelPropose::propose_server(
+                &mut chain, &store, vtime, cycle, shard, server_node, d, bytes,
+            )?;
+            ctx.traffic.record(MsgKind::ChainTx, bytes);
+            let mut t_shard_up = ctx.wan.transfer_s(bytes);
+            for (slot, cm) in shard_client_models[shard].iter().enumerate() {
+                let client_node = assignment.clients[shard][slot];
+                let dc = store.put(cm.clone());
+                ModelPropose::propose_client(
+                    &mut chain,
+                    &store,
+                    vtime,
+                    cycle,
+                    shard,
+                    client_node,
+                    dc,
+                    cm.wire_bytes(),
+                )?;
+                ctx.traffic.record(MsgKind::ChainTx, cm.wire_bytes());
+                t_shard_up += ctx.wan.transfer_s(cm.wire_bytes());
+            }
+            propose_s = propose_s.max(t_shard_up);
+        }
+
+        // each committee member pulls every other shard's models
+        let per_shard_bytes = shard_servers[0].wire_bytes()
+            + shard_client_models[0]
+                .iter()
+                .map(|c| c.wire_bytes())
+                .sum::<usize>();
+        let pull_bytes = (cfg.shards - 1) * per_shard_bytes;
+        for _ in 0..cfg.shards {
+            ctx.traffic.record(MsgKind::ChainTx, pull_bytes);
+        }
+        let distribute_s = ctx.wan.transfer_s(pull_bytes); // parallel pulls
+
+        // ---- committee evaluation (Algorithm 3 `Evaluate`) ------------------
+        for (m_shard, &member) in assignment.committee.iter().enumerate() {
+            let judge = &nodes[member];
+            let mut judged: Vec<(usize, f64)> = Vec::new();
+            for shard in 0..cfg.shards {
+                if shard == m_shard {
+                    continue;
+                }
+                let mut losses: Vec<f64> = Vec::new();
+                for cm in &shard_client_models[shard] {
+                    let ev = ctx.ops.evaluate(cm, &shard_servers[shard], &judge.val)?;
+                    losses.push(ev.loss);
+                }
+                judged.push((shard, crate::blockchain::median(&losses)));
+            }
+            let values: Vec<f64> = judged.iter().map(|&(_, v)| v).collect();
+            let reported = if judge.malicious && cfg.voting_attack {
+                invert_scores(&values)
+            } else {
+                values
+            };
+            for ((shard, _), value) in judged.iter().zip(reported.iter()) {
+                EvaluationPropose::post_score(
+                    &mut chain, vtime, cycle, &assignment, member, *shard, *value,
+                )?;
+                ctx.traffic.record(MsgKind::ChainTx, 64);
+            }
+        }
+        // members evaluate concurrently: (I-1)*J evaluate() calls each
+        let evals_per_member = (cfg.shards - 1) * cfg.clients_per_shard;
+        let eval_batches = nodes[assignment.committee[0]]
+            .val
+            .len()
+            .div_ceil(ctx.ops.eval_batch_size())
+            .max(1);
+        let eval_s =
+            evals_per_member as f64 * eval_batches as f64 * ctx.sim.prof.eval_batch_s;
+
+        // ---- EvaluationPropose / top-K aggregation ---------------------------
+        let finals = EvaluationPropose::tally(&chain, cycle, cfg.shards)?;
+        let winners = select_top_k(&finals, cfg.k);
+        let s_refs: Vec<&Bundle> = shard_servers.iter().collect();
+        server_global = topk_mean(&s_refs, &winners)?;
+        let winner_clients: Vec<&Bundle> = winners
+            .iter()
+            .flat_map(|&w| shard_client_models[w].iter())
+            .collect();
+        client_global = fedavg(&winner_clients)?;
+        let d_server = store.put(server_global.clone());
+        let d_client = store.put(client_global.clone());
+        let (w_chain, finals_chain) = EvaluationPropose::finalize(
+            &mut chain, vtime, cycle, cfg.shards, cfg.k, d_server, d_client,
+        )?;
+        debug_assert_eq!(w_chain, winners);
+        debug_assert_eq!(finals_chain, finals);
+        winners_per_cycle.push(winners.clone());
+
+        // ---- consensus / block propagation overhead --------------------------
+        // every block sealed this cycle is broadcast to the other
+        // committee members over the WAN, sequentially (total order).
+        let mut consensus_s = 0.0;
+        for b in &chain.blocks()[blocks_before..] {
+            let bytes = b.wire_bytes();
+            consensus_s += ctx.wan.latency_s + ctx.wan.transfer_s(bytes);
+            ctx.traffic.record(MsgKind::Block, bytes * (cfg.shards - 1));
+        }
+
+        // ---- bookkeeping -------------------------------------------------------
+        for (shard, &score) in finals.iter().enumerate() {
+            node_scores[assignment.committee[shard]] = score;
+            for &c in &assignment.clients[shard] {
+                node_scores[c] = score;
+            }
+        }
+        prev_committee = assignment.committee.clone();
+
+        let round_s = train_s + propose_s + distribute_s + eval_s + consensus_s;
+        vtime += round_s;
+
+        let val_loss = push_round_record(
+            ctx,
+            &mut records,
+            cycle,
+            &client_global,
+            &server_global,
+            valset,
+            round_s,
+            &stats,
+        )?;
+        if stop.update(val_loss) {
+            stopped_early = true;
+            break;
+        }
+    }
+
+    chain.verify()?; // the ledger must audit clean at the end of a run
+
+    let result = finish_run(
+        ctx,
+        format!("bsfl_n{}_k{}", cfg.nodes, cfg.k),
+        records,
+        &client_global,
+        &server_global,
+        testset,
+        stopped_early,
+    )?;
+    Ok((
+        result,
+        BsflArtifacts {
+            chain,
+            store,
+            winners_per_cycle,
+            committees,
+            assignments,
+        },
+    ))
+}

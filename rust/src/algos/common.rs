@@ -1,0 +1,315 @@
+//! Shared round engine: real PJRT numerics + virtual-time accounting.
+//!
+//! Every algorithm trains through [`train_client_on_server_copy`] /
+//! [`run_shard_round`], so loss curves across SL/SFL/SSFL/BSFL differ
+//! only by coordination (sequential vs parallel vs sharded vs
+//! committee-filtered aggregation) — the comparison the paper makes.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::attack::AttackPlan;
+use crate::config::ExpConfig;
+use crate::data::Dataset;
+use crate::metrics::{RoundRecord, RunResult};
+use crate::netsim::{ComputeProfile, LinkModel, MsgKind, ShardSim, Traffic};
+use crate::nodes::{build_nodes, Node};
+use crate::runtime::{ModelOps, StepStats};
+use crate::tensor::Bundle;
+use crate::util::rng::Rng;
+
+/// Everything a round needs besides the weights.
+pub struct TrainCtx<'a> {
+    pub ops: &'a ModelOps<'a>,
+    pub cfg: &'a ExpConfig,
+    /// Client <-> SL-server link + measured compute profile.
+    pub sim: ShardSim,
+    /// Link used for model-update shipping (client/server -> FL server).
+    pub lan: LinkModel,
+    /// Link used for blockchain traffic (committee, cross-org).
+    pub wan: LinkModel,
+    pub traffic: Traffic,
+    pub rng: Rng,
+    t_start: Instant,
+}
+
+impl<'a> TrainCtx<'a> {
+    /// Build the context: profiles compute on the real runtime (a couple
+    /// of warm-up steps), derives message sizes from the manifest.
+    pub fn new(cfg: &'a ExpConfig, ops: &'a ModelOps<'a>) -> Result<TrainCtx<'a>> {
+        let prof = ops.profile_compute(2)?;
+        Ok(Self::with_profile(cfg, ops, prof))
+    }
+
+    /// Build with an explicit compute profile (tests / what-if sweeps).
+    pub fn with_profile(
+        cfg: &'a ExpConfig,
+        ops: &'a ModelOps<'a>,
+        prof: ComputeProfile,
+    ) -> TrainCtx<'a> {
+        let lan = LinkModel::lan();
+        TrainCtx {
+            ops,
+            cfg,
+            sim: ShardSim {
+                link: lan,
+                prof,
+                act_bytes: ops.act_bytes(),
+                grad_bytes: ops.grad_bytes(),
+            },
+            lan,
+            wan: LinkModel::wan(),
+            traffic: Traffic::new(),
+            rng: Rng::new(cfg.seed ^ 0xA160_0000),
+            t_start: Instant::now(),
+        }
+    }
+
+    pub fn wall_s(&self) -> f64 {
+        self.t_start.elapsed().as_secs_f64()
+    }
+
+    /// Batches one client contributes per round (E epochs over its local
+    /// training split).
+    pub fn batches_per_client(&self, node: &Node) -> usize {
+        let b = self.ops.train_batch_size();
+        self.cfg.local_epochs * node.train.len().div_ceil(b)
+    }
+
+    /// Record the split-protocol traffic of one client-round.
+    pub fn record_shard_traffic(&mut self, batches: usize) {
+        for _ in 0..batches {
+            self.traffic.record(MsgKind::Activation, self.sim.act_bytes);
+            self.traffic.record(MsgKind::Gradient, self.sim.grad_bytes);
+        }
+    }
+}
+
+/// Train one client's local data against a *private copy* of the server
+/// model (Algorithm 1: the shard server keeps `W^S_{i,j}` per client).
+/// Updates `client` and `server_copy` in place; returns accumulated
+/// stats.
+pub fn train_client_on_server_copy(
+    ctx: &mut TrainCtx<'_>,
+    client: &mut Bundle,
+    server_copy: &mut Bundle,
+    node: &Node,
+) -> Result<StepStats> {
+    let mut stats = StepStats::default();
+    let b = ctx.ops.train_batch_size();
+    for _ in 0..ctx.cfg.local_epochs {
+        for batch in node.train.batches(b) {
+            // full_train_step == client_forward + server_train_step +
+            // client_backward (bit-identical; proven in
+            // rust/tests/runtime_smoke.rs) in one PJRT call.
+            let st = ctx
+                .ops
+                .full_train_step(client, server_copy, &batch, ctx.cfg.lr)?;
+            stats.merge(st);
+        }
+    }
+    ctx.record_shard_traffic(ctx.batches_per_client(node));
+    Ok(stats)
+}
+
+/// One SFL round inside a shard (Algorithm 1 `TrainingCycle`):
+/// every client trains in parallel against its own copy of the shard
+/// server model; afterwards the shard server averages its copies and the
+/// caller decides what to do with the updated client models.
+///
+/// Returns (updated per-client models, new shard server model, stats,
+/// virtual round seconds).
+pub fn run_shard_round(
+    ctx: &mut TrainCtx<'_>,
+    server_model: &Bundle,
+    client_models: &mut [Bundle],
+    clients: &[&Node],
+) -> Result<(Bundle, StepStats, f64)> {
+    assert_eq!(client_models.len(), clients.len());
+    let mut stats = StepStats::default();
+    let mut server_copies: Vec<Bundle> = Vec::with_capacity(clients.len());
+    let mut max_batches = 0usize;
+
+    for (cm, node) in client_models.iter_mut().zip(clients.iter()) {
+        let mut copy = server_model.clone();
+        let st = train_client_on_server_copy(ctx, cm, &mut copy, node)?;
+        stats.merge(st);
+        server_copies.push(copy);
+        max_batches = max_batches.max(ctx.batches_per_client(node));
+    }
+
+    // W^S_{i,r+1} = mean_j W^S_{i,j,r}  (Algorithm 1 line 14)
+    let refs: Vec<&Bundle> = server_copies.iter().collect();
+    let new_server = crate::aggregation::fedavg(&refs)?;
+
+    // virtual time: parallel clients, serial shard server
+    let round = ctx.sim.round(clients.len(), max_batches);
+    Ok((new_server, stats, round.round_s))
+}
+
+/// One *parallel-SL* round against a single **shared** server-side model
+/// (SplitFed's main-server dynamic, and the source of the paper's
+/// "imbalanced effective learning rate", §IV.B): the shared server model
+/// takes J*B SGD steps per round — one per client batch — while each
+/// client model takes only B steps before being FedAvg'd.
+///
+/// The server works through its request queue client-by-client (each
+/// client streams its whole local epoch while connected), so the server
+/// model drifts along every client's non-IID distribution in turn.
+/// Contrast with [`run_shard_round`]'s per-client server copies +
+/// averaging (Algorithm 1): bounding that drift to J=clients-per-shard
+/// and averaging shard servers is exactly the smoothing SSFL adds.
+pub fn run_interleaved_round(
+    ctx: &mut TrainCtx<'_>,
+    server_model: &mut Bundle,
+    client_models: &mut [Bundle],
+    clients: &[&Node],
+) -> Result<(StepStats, f64)> {
+    assert_eq!(client_models.len(), clients.len());
+    let mut stats = StepStats::default();
+    let b = ctx.ops.train_batch_size();
+    let mut max_batches = 0usize;
+
+    for (j, node) in clients.iter().enumerate() {
+        for _ in 0..ctx.cfg.local_epochs {
+            for batch in node.train.batches(b) {
+                let st = ctx.ops.full_train_step(
+                    &mut client_models[j],
+                    server_model,
+                    &batch,
+                    ctx.cfg.lr,
+                )?;
+                stats.merge(st);
+            }
+        }
+        max_batches = max_batches.max(ctx.batches_per_client(node));
+        ctx.record_shard_traffic(ctx.batches_per_client(node));
+    }
+
+    // clients compute in parallel; the serial server is the bottleneck
+    let round = ctx.sim.round(clients.len(), max_batches);
+    Ok((stats, round.round_s))
+}
+
+/// Ship a model bundle over a link, accounting traffic; returns transfer
+/// seconds.
+pub fn ship_model(
+    traffic: &mut Traffic,
+    link: &LinkModel,
+    bundle: &Bundle,
+    kind: MsgKind,
+) -> f64 {
+    let bytes = bundle.wire_bytes();
+    traffic.record(kind, bytes);
+    link.transfer_s(bytes)
+}
+
+/// Evaluate the global model on the held-out set and append the round
+/// record; returns the validation loss.
+#[allow(clippy::too_many_arguments)]
+pub fn push_round_record(
+    ctx: &TrainCtx<'_>,
+    records: &mut Vec<RoundRecord>,
+    round: usize,
+    client: &Bundle,
+    server: &Bundle,
+    valset: &Dataset,
+    round_s: f64,
+    train_stats: &StepStats,
+) -> Result<f64> {
+    let ev = ctx.ops.evaluate(client, server, valset)?;
+    let cum = records.last().map(|r| r.cum_s).unwrap_or(0.0) + round_s;
+    records.push(RoundRecord {
+        round,
+        val_loss: ev.loss,
+        val_acc: ev.accuracy,
+        round_s,
+        cum_s: cum,
+        train_loss: train_stats.mean_loss(),
+    });
+    crate::debug!(
+        "round {round}: val_loss={:.4} val_acc={:.3} round_s={:.1}",
+        ev.loss,
+        ev.accuracy,
+        round_s
+    );
+    Ok(ev.loss)
+}
+
+/// Early-stopping tracker (patience on the validation loss).
+pub struct EarlyStop {
+    patience: Option<usize>,
+    best: f64,
+    since_best: usize,
+}
+
+impl EarlyStop {
+    pub fn new(patience: Option<usize>) -> EarlyStop {
+        EarlyStop {
+            patience,
+            best: f64::INFINITY,
+            since_best: 0,
+        }
+    }
+
+    /// Feed this round's validation loss; true = stop now.
+    pub fn update(&mut self, val_loss: f64) -> bool {
+        if val_loss < self.best {
+            self.best = val_loss;
+            self.since_best = 0;
+        } else {
+            self.since_best += 1;
+        }
+        match self.patience {
+            Some(p) => self.since_best >= p,
+            None => false,
+        }
+    }
+}
+
+/// The attack plan a run derives from its config (exposed so tests and
+/// audits can identify the malicious nodes of a seeded run).
+pub fn attack_plan(cfg: &ExpConfig) -> AttackPlan {
+    let mut rng = Rng::new(cfg.seed);
+    if cfg.attack_fraction > 0.0 {
+        AttackPlan::random_fraction(cfg.nodes, cfg.attack_fraction, &mut rng)
+    } else {
+        AttackPlan::benign(cfg.nodes)
+    }
+}
+
+/// Build the node population for a run (attack plan from the config).
+pub fn make_nodes(cfg: &ExpConfig, corpus: &Dataset) -> Vec<Node> {
+    let mut rng = Rng::new(cfg.seed);
+    let plan = attack_plan(cfg);
+    // burn the same rng draws random_fraction used, keeping node data
+    // identical between benign and attacked runs of one seed
+    if cfg.attack_fraction > 0.0 {
+        let _ = AttackPlan::random_fraction(cfg.nodes, cfg.attack_fraction, &mut rng);
+    }
+    build_nodes(cfg, corpus, &plan, &mut rng)
+}
+
+/// Finalize a run result with test-set evaluation.
+pub fn finish_run(
+    ctx: &TrainCtx<'_>,
+    label: String,
+    records: Vec<RoundRecord>,
+    client: &Bundle,
+    server: &Bundle,
+    testset: &Dataset,
+    stopped_early: bool,
+) -> Result<RunResult> {
+    let test = ctx.ops.evaluate(client, server, testset)?;
+    Ok(RunResult {
+        algo: ctx.cfg.algo.name().to_string(),
+        label,
+        records,
+        test_loss: test.loss,
+        test_acc: test.accuracy,
+        stopped_early,
+        traffic: ctx.traffic.clone(),
+        wall_s: ctx.wall_s(),
+    })
+}

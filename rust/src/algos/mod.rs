@@ -1,0 +1,48 @@
+//! The four training orchestrators under comparison.
+//!
+//! * [`sl`]   — Split Learning: one SL server, clients train **sequentially**
+//!   and relay the client model (Gupta & Raskar).
+//! * [`sfl`]  — SplitFed Learning: one SL server with per-client server-side
+//!   copies, clients in parallel, FedAvg of both halves each round
+//!   (Thapa et al., the paper's Algorithm 1 with I = 1).
+//! * [`ssfl`] — Sharded SplitFed (paper contribution #1): I parallel shard
+//!   servers + an FL server aggregating shard servers *and* clients.
+//! * [`bsfl`] — Blockchain-enabled SplitFed (paper contribution #2): the FL
+//!   server replaced by the ledger + committee consensus with median
+//!   scoring and top-K aggregation (Algorithm 3).
+//!
+//! All four share [`common`]'s round engine (real PJRT numerics + virtual
+//! time) so cross-algorithm comparisons differ only in the coordination
+//! logic, exactly like the paper's fixed-hyperparameter setup (§VII.A).
+
+pub mod bsfl;
+pub mod common;
+pub mod sfl;
+pub mod sl;
+pub mod ssfl;
+
+use anyhow::Result;
+
+use crate::config::{Algo, ExpConfig};
+use crate::data::Dataset;
+use crate::metrics::RunResult;
+use crate::runtime::ModelOps;
+
+/// Run one experiment: build nodes from `corpus`, train with the
+/// configured algorithm, evaluate on `valset` every round and on
+/// `testset` at the end.
+pub fn run(
+    cfg: &ExpConfig,
+    ops: &ModelOps<'_>,
+    corpus: &Dataset,
+    valset: &Dataset,
+    testset: &Dataset,
+) -> Result<RunResult> {
+    cfg.validate()?;
+    match cfg.algo {
+        Algo::Sl => sl::run(cfg, ops, corpus, valset, testset),
+        Algo::Sfl => sfl::run(cfg, ops, corpus, valset, testset),
+        Algo::Ssfl => ssfl::run(cfg, ops, corpus, valset, testset),
+        Algo::Bsfl => bsfl::run(cfg, ops, corpus, valset, testset),
+    }
+}

@@ -1,0 +1,101 @@
+//! SplitFed Learning (Thapa et al.) — the paper's Algorithm 1 with a
+//! single shard (I = 1).
+//!
+//! Clients train in **parallel**, each against a private copy of the SL
+//! server model; at round end the SL server averages its per-client
+//! copies and the FL server FedAvgs the client models.  Fast in rounds,
+//! but the single SL server serializes all client batches — the
+//! scalability wall SSFL removes.
+
+use anyhow::Result;
+
+use crate::aggregation::fedavg;
+use crate::config::ExpConfig;
+use crate::data::Dataset;
+use crate::metrics::RunResult;
+use crate::netsim::MsgKind;
+use crate::runtime::ModelOps;
+
+use super::common::{
+    finish_run, make_nodes, push_round_record, run_interleaved_round, ship_model,
+    EarlyStop, TrainCtx,
+};
+
+pub fn run(
+    cfg: &ExpConfig,
+    ops: &ModelOps<'_>,
+    corpus: &Dataset,
+    valset: &Dataset,
+    testset: &Dataset,
+) -> Result<RunResult> {
+    let mut ctx = TrainCtx::new(cfg, ops)?;
+    run_with_ctx(&mut ctx, corpus, valset, testset)
+}
+
+pub fn run_with_ctx(
+    ctx: &mut TrainCtx<'_>,
+    corpus: &Dataset,
+    valset: &Dataset,
+    testset: &Dataset,
+) -> Result<RunResult> {
+    let cfg = ctx.cfg;
+    let nodes = make_nodes(cfg, corpus);
+    let clients: Vec<&crate::nodes::Node> = nodes[1..].iter().collect();
+
+    let (mut client_global, mut server_global) = ctx.ops.init_models()?;
+    let mut records = Vec::with_capacity(cfg.rounds);
+    let mut stop = EarlyStop::new(cfg.patience);
+    let mut stopped_early = false;
+
+    for round in 0..cfg.rounds {
+        // every client starts from the FedAvg'd global client model;
+        // the single SL server model is SHARED across all their batches
+        // (the scalability-breaking update imbalance, §IV.B).
+        let mut client_models = vec![client_global.clone(); clients.len()];
+        let (stats, mut round_s) =
+            run_interleaved_round(ctx, &mut server_global, &mut client_models, &clients)?;
+
+        // FL server aggregation of client models (upload + broadcast)
+        let refs: Vec<&crate::tensor::Bundle> = client_models.iter().collect();
+        client_global = fedavg(&refs)?;
+        let mut agg_s: f64 = 0.0;
+        for cm in &client_models {
+            agg_s = agg_s.max(ship_model(
+                &mut ctx.traffic,
+                &ctx.lan,
+                cm,
+                MsgKind::ModelUpdate,
+            ));
+        }
+        // broadcast back (same size, parallel to all clients)
+        agg_s += ctx.lan.transfer_s(client_global.wire_bytes());
+        ctx.traffic
+            .record(MsgKind::ModelUpdate, client_global.wire_bytes());
+        round_s += agg_s;
+
+        let val_loss = push_round_record(
+            ctx,
+            &mut records,
+            round,
+            &client_global,
+            &server_global,
+            valset,
+            round_s,
+            &stats,
+        )?;
+        if stop.update(val_loss) {
+            stopped_early = true;
+            break;
+        }
+    }
+
+    finish_run(
+        ctx,
+        format!("sfl_n{}", cfg.nodes),
+        records,
+        &client_global,
+        &server_global,
+        testset,
+        stopped_early,
+    )
+}

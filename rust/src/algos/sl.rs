@@ -1,0 +1,101 @@
+//! Baseline Split Learning (Gupta & Raskar).
+//!
+//! One SL server (node 0, holds no usable data), clients train strictly
+//! **sequentially**: client j trains its whole local split against the
+//! shared server model, then relays the client-side weights to client
+//! j+1.  No FedAvg anywhere — this is what makes SL slow (sequential
+//! wall-clock) and unstable at scale (the server model sees every batch,
+//! the client model drifts client-to-client).
+
+use anyhow::Result;
+
+use crate::config::ExpConfig;
+use crate::data::Dataset;
+use crate::metrics::RunResult;
+use crate::netsim::MsgKind;
+use crate::runtime::{ModelOps, StepStats};
+
+use super::common::{
+    finish_run, make_nodes, push_round_record, train_client_on_server_copy, EarlyStop,
+    TrainCtx,
+};
+
+pub fn run(
+    cfg: &ExpConfig,
+    ops: &ModelOps<'_>,
+    corpus: &Dataset,
+    valset: &Dataset,
+    testset: &Dataset,
+) -> Result<RunResult> {
+    let mut ctx = TrainCtx::new(cfg, ops)?;
+    run_with_ctx(&mut ctx, corpus, valset, testset)
+}
+
+pub fn run_with_ctx(
+    ctx: &mut TrainCtx<'_>,
+    corpus: &Dataset,
+    valset: &Dataset,
+    testset: &Dataset,
+) -> Result<RunResult> {
+    let cfg = ctx.cfg;
+    let nodes = make_nodes(cfg, corpus);
+    // node 0 is the central SL server; its local data goes unused
+    // (paper §VII.A: "one of the nodes serves as the central server").
+    let clients = &nodes[1..];
+
+    let (mut client_model, mut server_model) = ctx.ops.init_models()?;
+    let mut records = Vec::with_capacity(cfg.rounds);
+    let mut stop = EarlyStop::new(cfg.patience);
+    let mut stopped_early = false;
+
+    for round in 0..cfg.rounds {
+        let mut stats = StepStats::default();
+        let mut batches_total = 0usize;
+        for node in clients {
+            // sequential: the SHARED server model is updated in place —
+            // no per-client copies in SL.
+            let st = train_client_on_server_copy(
+                ctx,
+                &mut client_model,
+                &mut server_model,
+                node,
+            )?;
+            stats.merge(st);
+            batches_total += ctx.batches_per_client(node);
+            // client-model relay to the next client
+            ctx.traffic
+                .record(MsgKind::ModelUpdate, client_model.wire_bytes());
+        }
+
+        let per_client = batches_total / clients.len().max(1);
+        let round_s = ctx
+            .sim
+            .round_sequential(clients.len(), per_client, client_model.wire_bytes())
+            .round_s;
+
+        let val_loss = push_round_record(
+            ctx,
+            &mut records,
+            round,
+            &client_model,
+            &server_model,
+            valset,
+            round_s,
+            &stats,
+        )?;
+        if stop.update(val_loss) {
+            stopped_early = true;
+            break;
+        }
+    }
+
+    finish_run(
+        ctx,
+        format!("sl_n{}", cfg.nodes),
+        records,
+        &client_model,
+        &server_model,
+        testset,
+        stopped_early,
+    )
+}

@@ -1,0 +1,148 @@
+//! Sharded SplitFed Learning — the paper's first contribution
+//! (Algorithm 1 with I > 1 shards + the extra FL aggregation layer).
+//!
+//! Static topology: nodes 0..I are shard servers, the remaining nodes are
+//! dealt round-robin as clients.  Each cycle every shard runs `R`
+//! (inner_rounds) SFL rounds in parallel; then the FL server FedAvgs the
+//! shard server models (`W^S_{t+1} = mean_i W^S_{i,t}`) **and** all client
+//! models (Algorithm 1 lines 24-28).  Averaging the shard servers halves
+//! the server model's effective learning rate imbalance — the paper's fix
+//! for the scalability-induced performance collapse (§IV.B).
+
+use anyhow::Result;
+
+use crate::aggregation::fedavg;
+use crate::config::ExpConfig;
+use crate::data::Dataset;
+use crate::metrics::RunResult;
+use crate::netsim::{self, MsgKind};
+use crate::nodes::Node;
+use crate::runtime::{ModelOps, StepStats};
+use crate::tensor::Bundle;
+
+use super::common::{
+    finish_run, make_nodes, push_round_record, run_shard_round, ship_model, EarlyStop,
+    TrainCtx,
+};
+
+/// Static shard topology for SSFL: (server node ids, clients per shard).
+pub fn static_shards(cfg: &ExpConfig) -> (Vec<usize>, Vec<Vec<usize>>) {
+    let servers: Vec<usize> = (0..cfg.shards).collect();
+    let mut clients = vec![Vec::with_capacity(cfg.clients_per_shard); cfg.shards];
+    for (k, node) in (cfg.shards..cfg.nodes).enumerate() {
+        clients[k % cfg.shards].push(node);
+    }
+    (servers, clients)
+}
+
+pub fn run(
+    cfg: &ExpConfig,
+    ops: &ModelOps<'_>,
+    corpus: &Dataset,
+    valset: &Dataset,
+    testset: &Dataset,
+) -> Result<RunResult> {
+    let mut ctx = TrainCtx::new(cfg, ops)?;
+    run_with_ctx(&mut ctx, corpus, valset, testset)
+}
+
+pub fn run_with_ctx(
+    ctx: &mut TrainCtx<'_>,
+    corpus: &Dataset,
+    valset: &Dataset,
+    testset: &Dataset,
+) -> Result<RunResult> {
+    let cfg = ctx.cfg;
+    let nodes = make_nodes(cfg, corpus);
+    let (_, shard_clients) = static_shards(cfg);
+
+    let (mut client_global, mut server_global) = ctx.ops.init_models()?;
+    let mut records = Vec::with_capacity(cfg.rounds);
+    let mut stop = EarlyStop::new(cfg.patience);
+    let mut stopped_early = false;
+
+    for round in 0..cfg.rounds {
+        let mut shard_servers: Vec<Bundle> = Vec::with_capacity(cfg.shards);
+        let mut all_clients: Vec<Bundle> = Vec::new();
+        let mut shard_times: Vec<f64> = Vec::with_capacity(cfg.shards);
+        let mut stats = StepStats::default();
+
+        for shard in 0..cfg.shards {
+            let members: Vec<&Node> =
+                shard_clients[shard].iter().map(|&id| &nodes[id]).collect();
+            let mut server_i = server_global.clone();
+            let mut client_models = vec![client_global.clone(); members.len()];
+            let mut t_shard = 0.0;
+            for _ in 0..cfg.inner_rounds {
+                let (new_server, st, t) =
+                    run_shard_round(ctx, &server_i, &mut client_models, &members)?;
+                server_i = new_server;
+                stats.merge(st);
+                t_shard += t;
+            }
+            shard_servers.push(server_i);
+            all_clients.extend(client_models);
+            shard_times.push(t_shard);
+        }
+
+        // FL server aggregation across shards (Algorithm 1 lines 24-28).
+        let s_refs: Vec<&Bundle> = shard_servers.iter().collect();
+        server_global = fedavg(&s_refs)?;
+        let c_refs: Vec<&Bundle> = all_clients.iter().collect();
+        client_global = fedavg(&c_refs)?;
+
+        // shards run in parallel; aggregation traffic afterwards
+        let mut round_s = netsim::parallel(&shard_times);
+        let mut agg_s: f64 = 0.0;
+        for sm in &shard_servers {
+            agg_s = agg_s.max(ship_model(
+                &mut ctx.traffic,
+                &ctx.lan,
+                sm,
+                MsgKind::ModelUpdate,
+            ));
+        }
+        for cm in &all_clients {
+            agg_s = agg_s.max(ship_model(
+                &mut ctx.traffic,
+                &ctx.lan,
+                cm,
+                MsgKind::ModelUpdate,
+            ));
+        }
+        // broadcast the two globals back
+        agg_s += ctx
+            .lan
+            .transfer_s(server_global.wire_bytes() + client_global.wire_bytes());
+        ctx.traffic.record(
+            MsgKind::ModelUpdate,
+            server_global.wire_bytes() + client_global.wire_bytes(),
+        );
+        round_s += agg_s;
+
+        let val_loss = push_round_record(
+            ctx,
+            &mut records,
+            round,
+            &client_global,
+            &server_global,
+            valset,
+            round_s,
+            &stats,
+        )?;
+        if stop.update(val_loss) {
+            stopped_early = true;
+            break;
+        }
+    }
+
+    finish_run(
+        ctx,
+        format!("ssfl_n{}_i{}", cfg.nodes, cfg.shards),
+        records,
+        &client_global,
+        &server_global,
+        testset,
+        stopped_early,
+    )
+}

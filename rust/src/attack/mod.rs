@@ -1,0 +1,159 @@
+//! Adversary models (paper §VII.B).
+//!
+//! * **Data poisoning** — malicious clients flip their local labels
+//!   (`y -> (y + 1) mod C`, the classic targeted label-flip), so the
+//!   updates they contribute drag the global model toward systematically
+//!   wrong decision boundaries.
+//! * **Noise-update poisoning** — a stronger model-space variant: the
+//!   malicious client ships weights perturbed with heavy Gaussian noise
+//!   (used in the ablations; the paper's headline attack is label flip).
+//! * **Voting attack** — a malicious *committee member* inverts its
+//!   scores (best models get the worst score and vice versa) to push bad
+//!   updates through `EvaluationPropose` (§VII.B's committee attack).
+
+use crate::data::{Dataset, CLASSES};
+use crate::tensor::Bundle;
+use crate::util::rng::Rng;
+
+/// Which nodes are adversarial, decided once per experiment.
+#[derive(Clone, Debug, Default)]
+pub struct AttackPlan {
+    malicious: Vec<bool>,
+}
+
+impl AttackPlan {
+    /// No attackers.
+    pub fn benign(n_nodes: usize) -> AttackPlan {
+        AttackPlan {
+            malicious: vec![false; n_nodes],
+        }
+    }
+
+    /// Mark a uniformly-random `fraction` of nodes malicious
+    /// (paper: 33% of 9, 47% of 36).
+    pub fn random_fraction(n_nodes: usize, fraction: f64, rng: &mut Rng) -> AttackPlan {
+        let k = ((n_nodes as f64) * fraction).round() as usize;
+        let mut malicious = vec![false; n_nodes];
+        for i in rng.sample_indices(n_nodes, k.min(n_nodes)) {
+            malicious[i] = true;
+        }
+        AttackPlan { malicious }
+    }
+
+    pub fn is_malicious(&self, node: usize) -> bool {
+        self.malicious.get(node).copied().unwrap_or(false)
+    }
+
+    pub fn count(&self) -> usize {
+        self.malicious.iter().filter(|&&m| m).count()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.malicious.len()
+    }
+}
+
+/// Label-flip poisoning: rotate every label by one class.
+/// Deterministic (no rng) so the attack is identical across algorithms —
+/// the comparison the paper's Table III makes.
+pub fn poison_labels(ds: &Dataset) -> Dataset {
+    let flipped: Vec<i32> = ds
+        .labels()
+        .iter()
+        .map(|&y| (y + 1) % CLASSES as i32)
+        .collect();
+    let mut images = Vec::with_capacity(ds.len() * crate::data::PIXELS);
+    for i in 0..ds.len() {
+        images.extend_from_slice(ds.image(i));
+    }
+    Dataset::new(images, flipped).expect("poison preserves structure")
+}
+
+/// Noise-update poisoning: add N(0, sigma) to every weight.
+pub fn poison_update(bundle: &Bundle, sigma: f32, rng: &mut Rng) -> Bundle {
+    let mut out = bundle.clone();
+    for t in out.tensors_mut() {
+        for v in t.data_mut() {
+            *v += rng.normal_f32(0.0, sigma);
+        }
+    }
+    out
+}
+
+/// Voting attack: invert a committee member's honest scores so the worst
+/// update looks best.  `honest[i]` is the member's true validation loss
+/// for shard i; the returned vector reverses the ranking while keeping
+/// the same value set (hard for range-based sanity checks to spot).
+pub fn invert_scores(honest: &[f64]) -> Vec<f64> {
+    let mut sorted: Vec<f64> = honest.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN score"));
+    // rank of each honest score
+    honest
+        .iter()
+        .map(|&v| {
+            let rank = sorted
+                .iter()
+                .position(|&s| s == v)
+                .expect("value came from this slice");
+            sorted[sorted.len() - 1 - rank]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn plan_fraction_counts() {
+        let mut rng = Rng::new(1);
+        let p = AttackPlan::random_fraction(36, 0.47, &mut rng);
+        assert_eq!(p.count(), 17); // round(36 * 0.47)
+        let b = AttackPlan::benign(9);
+        assert_eq!(b.count(), 0);
+    }
+
+    #[test]
+    fn label_flip_changes_every_label() {
+        let ds = synthetic::generate(100, 2);
+        let bad = poison_labels(&ds);
+        assert_eq!(ds.len(), bad.len());
+        for i in 0..ds.len() {
+            assert_ne!(ds.label(i), bad.label(i));
+            assert_eq!(bad.label(i), (ds.label(i) + 1) % 10);
+            assert_eq!(ds.image(i), bad.image(i)); // images untouched
+        }
+    }
+
+    #[test]
+    fn noise_poison_perturbs() {
+        let b = Bundle::new(
+            vec!["w".into()],
+            vec![Tensor::new(vec![100], vec![0.0; 100]).unwrap()],
+        )
+        .unwrap();
+        let mut rng = Rng::new(3);
+        let bad = poison_update(&b, 1.0, &mut rng);
+        assert!(bad.max_abs_diff(&b).unwrap() > 0.5);
+    }
+
+    #[test]
+    fn invert_scores_reverses_ranking() {
+        let honest = vec![0.1, 0.9, 0.5];
+        let evil = invert_scores(&honest);
+        assert_eq!(evil, vec![0.9, 0.1, 0.5]);
+        // the best (0.1) now carries the worst value (0.9)
+    }
+
+    #[test]
+    fn invert_scores_keeps_value_set() {
+        let honest = vec![0.3, 0.2, 0.8, 0.5];
+        let mut evil = invert_scores(&honest);
+        let mut h = honest.clone();
+        evil.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        h.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(evil, h);
+    }
+}

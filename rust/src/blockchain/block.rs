@@ -1,0 +1,96 @@
+//! Hash-chained blocks.
+
+use sha2::{Digest as _, Sha256};
+
+use super::tx::{Digest, Transaction};
+
+/// One ledger block: a batch of transactions sealed over the previous
+/// block's hash.  `virtual_time_s` is the netsim clock at sealing time
+/// (the simulation's analogue of a block timestamp).
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub index: u64,
+    pub prev_hash: Digest,
+    pub virtual_time_s: f64,
+    pub txs: Vec<Transaction>,
+    pub hash: Digest,
+}
+
+impl Block {
+    /// Seal a new block over `prev_hash`.
+    pub fn seal(
+        index: u64,
+        prev_hash: Digest,
+        virtual_time_s: f64,
+        txs: Vec<Transaction>,
+    ) -> Block {
+        let hash = Self::compute_hash(index, &prev_hash, virtual_time_s, &txs);
+        Block {
+            index,
+            prev_hash,
+            virtual_time_s,
+            txs,
+            hash,
+        }
+    }
+
+    /// Deterministic block hash over header + canonical tx bytes.
+    pub fn compute_hash(
+        index: u64,
+        prev_hash: &Digest,
+        virtual_time_s: f64,
+        txs: &[Transaction],
+    ) -> Digest {
+        let mut h = Sha256::new();
+        h.update(index.to_le_bytes());
+        h.update(prev_hash);
+        h.update(virtual_time_s.to_le_bytes());
+        for tx in txs {
+            h.update(tx.canonical_bytes());
+        }
+        h.finalize().into()
+    }
+
+    /// Recheck this block's seal.
+    pub fn verify(&self) -> bool {
+        self.hash
+            == Self::compute_hash(self.index, &self.prev_hash, self.virtual_time_s, &self.txs)
+    }
+
+    /// Wire size when propagated to committee members.
+    pub fn wire_bytes(&self) -> usize {
+        // header: index + prev_hash + time + hash
+        8 + 32 + 8 + 32 + self.txs.iter().map(|t| t.wire_bytes()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seal_verifies() {
+        let b = Block::seal(1, [7u8; 32], 1.5, vec![]);
+        assert!(b.verify());
+    }
+
+    #[test]
+    fn tamper_detected() {
+        let mut b = Block::seal(
+            1,
+            [7u8; 32],
+            1.5,
+            vec![Transaction::Score {
+                cycle: 0,
+                from: 1,
+                about: 2,
+                value: 0.5,
+            }],
+        );
+        assert!(b.verify());
+        if let Transaction::Score { value, .. } = &mut b.txs[0] {
+            *value = 0.1; // a malicious node edits its score post-hoc
+        }
+        assert!(!b.verify());
+    }
+}

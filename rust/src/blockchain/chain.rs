@@ -1,0 +1,140 @@
+//! The ledger: an append-only chain of sealed blocks.
+
+use anyhow::{bail, Result};
+
+use super::block::Block;
+use super::tx::{Digest, Transaction};
+
+const GENESIS_HASH: Digest = [0u8; 32];
+
+/// Append-only hash-linked ledger.
+#[derive(Clone, Debug, Default)]
+pub struct Chain {
+    blocks: Vec<Block>,
+}
+
+impl Chain {
+    pub fn new() -> Chain {
+        Chain::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    pub fn tip_hash(&self) -> Digest {
+        self.blocks.last().map(|b| b.hash).unwrap_or(GENESIS_HASH)
+    }
+
+    pub fn blocks(&self) -> &[Block] {
+        &self.blocks
+    }
+
+    /// Seal `txs` into a new block at virtual time `t` and append it.
+    /// Returns a reference to the appended block.
+    pub fn append(&mut self, virtual_time_s: f64, txs: Vec<Transaction>) -> &Block {
+        let block = Block::seal(
+            self.blocks.len() as u64,
+            self.tip_hash(),
+            virtual_time_s,
+            txs,
+        );
+        self.blocks.push(block);
+        self.blocks.last().expect("just pushed")
+    }
+
+    /// Full-chain integrity check: indices, hash links, and seals.
+    pub fn verify(&self) -> Result<()> {
+        let mut prev = GENESIS_HASH;
+        for (i, b) in self.blocks.iter().enumerate() {
+            if b.index != i as u64 {
+                bail!("block {i}: index {} out of order", b.index);
+            }
+            if b.prev_hash != prev {
+                bail!("block {i}: broken hash link");
+            }
+            if !b.verify() {
+                bail!("block {i}: seal mismatch (tampered)");
+            }
+            prev = b.hash;
+        }
+        Ok(())
+    }
+
+    /// Iterate all transactions in ledger order.
+    pub fn txs(&self) -> impl Iterator<Item = &Transaction> {
+        self.blocks.iter().flat_map(|b| b.txs.iter())
+    }
+
+    /// All transactions for a given cycle.
+    pub fn cycle_txs(&self, cycle: usize) -> Vec<&Transaction> {
+        self.txs()
+            .filter(|t| match t {
+                Transaction::Assignment { cycle: c, .. }
+                | Transaction::ServerModel { cycle: c, .. }
+                | Transaction::ClientModel { cycle: c, .. }
+                | Transaction::Score { cycle: c, .. }
+                | Transaction::Aggregation { cycle: c, .. } => *c == cycle,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn score(cycle: usize, v: f64) -> Transaction {
+        Transaction::Score {
+            cycle,
+            from: 0,
+            about: 0,
+            value: v,
+        }
+    }
+
+    #[test]
+    fn append_links_blocks() {
+        let mut c = Chain::new();
+        c.append(0.0, vec![score(0, 0.5)]);
+        c.append(1.0, vec![score(1, 0.4)]);
+        c.append(2.0, vec![]);
+        assert_eq!(c.len(), 3);
+        c.verify().unwrap();
+        assert_eq!(c.blocks()[1].prev_hash, c.blocks()[0].hash);
+    }
+
+    #[test]
+    fn verify_catches_tamper() {
+        let mut c = Chain::new();
+        c.append(0.0, vec![score(0, 0.5)]);
+        c.append(1.0, vec![score(1, 0.4)]);
+        // tamper with history
+        if let Transaction::Score { value, .. } = &mut c.blocks[0].txs[0] {
+            *value = 0.0;
+        }
+        assert!(c.verify().is_err());
+    }
+
+    #[test]
+    fn verify_catches_reorder() {
+        let mut c = Chain::new();
+        c.append(0.0, vec![]);
+        c.append(1.0, vec![]);
+        c.blocks.swap(0, 1);
+        assert!(c.verify().is_err());
+    }
+
+    #[test]
+    fn cycle_filter() {
+        let mut c = Chain::new();
+        c.append(0.0, vec![score(0, 0.1), score(1, 0.2)]);
+        c.append(1.0, vec![score(1, 0.3)]);
+        assert_eq!(c.cycle_txs(1).len(), 2);
+        assert_eq!(c.cycle_txs(2).len(), 0);
+    }
+}

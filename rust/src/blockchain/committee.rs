@@ -1,0 +1,208 @@
+//! Committee-consensus primitives: median scoring, top-K winner
+//! selection, and rotation-aware committee election (paper §V.A, §V.C).
+//!
+//! These are pure functions so the security-critical logic is
+//! property-testable in isolation (see `rust/tests/prop_committee.rs`).
+
+use super::tx::{NodeId, ShardId};
+use crate::util::rng::Rng;
+
+/// The cycle topology produced by election: `committee[i]` serves shard
+/// `i`; `clients[i]` are its clients.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Assignment {
+    pub committee: Vec<NodeId>,
+    pub clients: Vec<Vec<NodeId>>,
+}
+
+impl Assignment {
+    /// Total nodes covered.
+    pub fn node_count(&self) -> usize {
+        self.committee.len() + self.clients.iter().map(|c| c.len()).sum::<usize>()
+    }
+
+    /// Every node appears exactly once (committee or client).
+    pub fn is_partition_of(&self, n_nodes: usize) -> bool {
+        let mut seen = vec![false; n_nodes];
+        for &n in self
+            .committee
+            .iter()
+            .chain(self.clients.iter().flatten())
+        {
+            if n >= n_nodes || seen[n] {
+                return false;
+            }
+            seen[n] = true;
+        }
+        seen.iter().all(|&s| s)
+    }
+}
+
+/// Median of scores (mean of the two middle values for even length).
+/// This is the aggregation that makes the consensus robust: a minority of
+/// malicious judges cannot move the median beyond the honest range.
+pub fn median(scores: &[f64]) -> f64 {
+    assert!(!scores.is_empty(), "median of empty scores");
+    let mut s = scores.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).expect("NaN score"));
+    let n = s.len();
+    if n % 2 == 1 {
+        s[n / 2]
+    } else {
+        0.5 * (s[n / 2 - 1] + s[n / 2])
+    }
+}
+
+/// Pick the `k` shards with the lowest final score (validation loss —
+/// lower is better).  Ties break toward the lower shard id so the
+/// contract output is deterministic across committee members.
+pub fn select_top_k(final_scores: &[f64], k: usize) -> Vec<ShardId> {
+    let mut ids: Vec<ShardId> = (0..final_scores.len()).collect();
+    ids.sort_by(|&a, &b| {
+        final_scores[a]
+            .partial_cmp(&final_scores[b])
+            .expect("NaN score")
+            .then(a.cmp(&b))
+    });
+    ids.truncate(k.min(final_scores.len()));
+    ids
+}
+
+/// Elect the next cycle's committee and deal clients to shards.
+///
+/// * `scores[n]` — node n's score from the previous cycle (its shard's
+///   final median validation loss; lower is better). `f64::INFINITY` for
+///   nodes with no history.
+/// * `prev_committee` — members barred from consecutive service
+///   (rotation rule, paper §V.C).
+/// * `random` — ignore scores and assign uniformly (cycle 1, and the
+///   §VI.D random-election ablation).
+///
+/// Nodes are dealt to shards in score order, so shard 0 holds the most
+/// efficient nodes — the paper's "group nodes with similar efficiency
+/// within the same shard" policy.
+pub fn elect_committee(
+    n_nodes: usize,
+    shards: usize,
+    clients_per_shard: usize,
+    prev_committee: &[NodeId],
+    scores: &[f64],
+    random: bool,
+    rng: &mut Rng,
+) -> Assignment {
+    assert_eq!(
+        n_nodes,
+        shards * (clients_per_shard + 1),
+        "node count must equal shards * (clients_per_shard + 1)"
+    );
+    assert_eq!(scores.len(), n_nodes);
+    assert!(
+        prev_committee.len() <= n_nodes - shards,
+        "rotation infeasible: too few non-members"
+    );
+
+    let order: Vec<NodeId> = if random {
+        let mut ids: Vec<NodeId> = (0..n_nodes).collect();
+        rng.shuffle(&mut ids);
+        ids
+    } else {
+        // score-sorted, ties broken randomly but deterministically in rng
+        let mut keyed: Vec<(f64, u64, NodeId)> = (0..n_nodes)
+            .map(|n| (scores[n], rng.next_u64(), n))
+            .collect();
+        keyed.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .expect("NaN score")
+                .then(a.1.cmp(&b.1))
+        });
+        keyed.into_iter().map(|(_, _, n)| n).collect()
+    };
+
+    // Servers: best-scoring nodes that did NOT serve last cycle.
+    let mut committee = Vec::with_capacity(shards);
+    for &n in &order {
+        if committee.len() == shards {
+            break;
+        }
+        if !prev_committee.contains(&n) {
+            committee.push(n);
+        }
+    }
+
+    // Clients: everyone else, dealt sequentially in score order
+    // (similar-efficiency grouping).
+    let mut clients = vec![Vec::with_capacity(clients_per_shard); shards];
+    let mut shard = 0usize;
+    for &n in &order {
+        if committee.contains(&n) {
+            continue;
+        }
+        while clients[shard].len() == clients_per_shard {
+            shard += 1;
+        }
+        clients[shard].push(n);
+    }
+
+    Assignment { committee, clients }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(median(&[5.0]), 5.0);
+    }
+
+    #[test]
+    fn median_resists_minority_outliers() {
+        // 3 honest scores ~0.5, 2 malicious zeros: median stays honest.
+        let m = median(&[0.5, 0.52, 0.48, 0.0, 0.0]);
+        assert!((0.4..0.6).contains(&m));
+    }
+
+    #[test]
+    fn top_k_lowest_loss_wins() {
+        let picks = select_top_k(&[0.9, 0.1, 0.5, 0.3], 2);
+        assert_eq!(picks, vec![1, 3]);
+    }
+
+    #[test]
+    fn top_k_deterministic_on_ties() {
+        let picks = select_top_k(&[0.5, 0.5, 0.5], 2);
+        assert_eq!(picks, vec![0, 1]);
+    }
+
+    #[test]
+    fn election_is_a_partition_with_rotation() {
+        let mut rng = Rng::new(1);
+        let scores = vec![0.5; 9];
+        let prev = vec![0, 1, 2];
+        let a = elect_committee(9, 3, 2, &prev, &scores, false, &mut rng);
+        assert!(a.is_partition_of(9));
+        for m in &a.committee {
+            assert!(!prev.contains(m), "rotation violated: {m}");
+        }
+        assert_eq!(a.clients.iter().map(Vec::len).sum::<usize>(), 6);
+    }
+
+    #[test]
+    fn election_prefers_low_scores() {
+        let mut rng = Rng::new(2);
+        let mut scores = vec![1.0; 9];
+        scores[7] = 0.01; // best node
+        let a = elect_committee(9, 3, 2, &[], &scores, false, &mut rng);
+        assert!(a.committee.contains(&7));
+    }
+
+    #[test]
+    fn random_election_uses_all_nodes() {
+        let mut rng = Rng::new(3);
+        let a = elect_committee(36, 6, 5, &[], &vec![f64::INFINITY; 36], true, &mut rng);
+        assert!(a.is_partition_of(36));
+        assert_eq!(a.committee.len(), 6);
+    }
+}

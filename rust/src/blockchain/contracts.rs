@@ -1,0 +1,437 @@
+//! The paper's three chaincodes (§V.B), as validating state machines over
+//! the ledger + model store.
+//!
+//! Each contract validates its inputs against ledger state before writing
+//! — a malicious orchestrator (or node) cannot double-propose, score a
+//! nonexistent shard, self-score, or aggregate unproposed models.  The
+//! BSFL orchestrator in `algos::bsfl` drives these exactly the way the
+//! paper's Fabric peers would invoke chaincode.
+
+use anyhow::{bail, Result};
+
+use super::chain::Chain;
+use super::committee::{self, Assignment};
+use super::store::ModelStore;
+use super::tx::{Digest, NodeId, ShardId, Transaction};
+use crate::util::rng::Rng;
+
+/// `AssignNodes` — elect the cycle's committee and shard composition
+/// (random in cycle 1, score-based afterwards), and record it.
+pub struct AssignNodes;
+
+impl AssignNodes {
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute(
+        chain: &mut Chain,
+        vtime: f64,
+        cycle: usize,
+        n_nodes: usize,
+        shards: usize,
+        clients_per_shard: usize,
+        prev_committee: &[NodeId],
+        scores: &[f64],
+        random: bool,
+        rng: &mut Rng,
+    ) -> Result<Assignment> {
+        let a = committee::elect_committee(
+            n_nodes,
+            shards,
+            clients_per_shard,
+            prev_committee,
+            scores,
+            random,
+            rng,
+        );
+        if !a.is_partition_of(n_nodes) {
+            bail!("assignment is not a partition of {n_nodes} nodes");
+        }
+        chain.append(
+            vtime,
+            vec![Transaction::Assignment {
+                cycle,
+                committee: a.committee.clone(),
+                clients: a.clients.clone(),
+            }],
+        );
+        Ok(a)
+    }
+
+    /// Read back the assignment recorded for `cycle`.
+    pub fn lookup(chain: &Chain, cycle: usize) -> Option<Assignment> {
+        chain.txs().rev_find_assignment(cycle)
+    }
+}
+
+// small extension trait so lookup stays readable
+trait FindAssignment<'a> {
+    fn rev_find_assignment(self, cycle: usize) -> Option<Assignment>;
+}
+
+impl<'a, I: Iterator<Item = &'a Transaction>> FindAssignment<'a> for I {
+    fn rev_find_assignment(self, cycle: usize) -> Option<Assignment> {
+        let mut found = None;
+        for tx in self {
+            if let Transaction::Assignment {
+                cycle: c,
+                committee,
+                clients,
+            } = tx
+            {
+                if *c == cycle {
+                    found = Some(Assignment {
+                        committee: committee.clone(),
+                        clients: clients.clone(),
+                    });
+                }
+            }
+        }
+        found
+    }
+}
+
+/// `ModelPropose` — shard servers and clients post their trained model
+/// digests; payloads go to the store.
+pub struct ModelPropose;
+
+impl ModelPropose {
+    /// A shard server proposes its server-side model.
+    pub fn propose_server(
+        chain: &mut Chain,
+        store: &ModelStore,
+        vtime: f64,
+        cycle: usize,
+        shard: ShardId,
+        server: NodeId,
+        digest: Digest,
+        bytes: usize,
+    ) -> Result<()> {
+        store.get(&digest)?; // payload must exist & match digest
+        let duplicate = chain.txs().any(|t| {
+            matches!(t, Transaction::ServerModel { cycle: c, shard: s, .. }
+                     if *c == cycle && *s == shard)
+        });
+        if duplicate {
+            bail!("shard {shard} already proposed a server model in cycle {cycle}");
+        }
+        chain.append(
+            vtime,
+            vec![Transaction::ServerModel {
+                cycle,
+                shard,
+                server,
+                digest,
+                bytes,
+            }],
+        );
+        Ok(())
+    }
+
+    /// A client proposes its client-side model.
+    pub fn propose_client(
+        chain: &mut Chain,
+        store: &ModelStore,
+        vtime: f64,
+        cycle: usize,
+        shard: ShardId,
+        client: NodeId,
+        digest: Digest,
+        bytes: usize,
+    ) -> Result<()> {
+        store.get(&digest)?;
+        let duplicate = chain.txs().any(|t| {
+            matches!(t, Transaction::ClientModel { cycle: c, client: n, .. }
+                     if *c == cycle && *n == client)
+        });
+        if duplicate {
+            bail!("client {client} already proposed in cycle {cycle}");
+        }
+        chain.append(
+            vtime,
+            vec![Transaction::ClientModel {
+                cycle,
+                shard,
+                client,
+                digest,
+                bytes,
+            }],
+        );
+        Ok(())
+    }
+
+    /// Collect the cycle's proposed models: per shard, the server digest
+    /// and all client digests (what `Evaluate` consumes).
+    pub fn collect(
+        chain: &Chain,
+        cycle: usize,
+        shards: usize,
+    ) -> Result<Vec<(Digest, Vec<Digest>)>> {
+        let mut servers: Vec<Option<Digest>> = vec![None; shards];
+        let mut clients: Vec<Vec<Digest>> = vec![Vec::new(); shards];
+        for tx in chain.txs() {
+            match tx {
+                Transaction::ServerModel {
+                    cycle: c,
+                    shard,
+                    digest,
+                    ..
+                } if *c == cycle => servers[*shard] = Some(*digest),
+                Transaction::ClientModel {
+                    cycle: c,
+                    shard,
+                    digest,
+                    ..
+                } if *c == cycle => clients[*shard].push(*digest),
+                _ => {}
+            }
+        }
+        let mut out = Vec::with_capacity(shards);
+        for (i, (s, c)) in servers.into_iter().zip(clients).enumerate() {
+            match s {
+                None => bail!("shard {i} never proposed a server model in cycle {cycle}"),
+                Some(d) => out.push((d, c)),
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// `EvaluationPropose` — committee members post scores; the contract
+/// medians them, picks the top-K winners, and records the aggregation.
+pub struct EvaluationPropose;
+
+impl EvaluationPropose {
+    /// A committee member posts its validation score for one shard.
+    /// Self-scoring is rejected.
+    #[allow(clippy::too_many_arguments)]
+    pub fn post_score(
+        chain: &mut Chain,
+        vtime: f64,
+        cycle: usize,
+        assignment: &Assignment,
+        from: NodeId,
+        about: ShardId,
+        value: f64,
+    ) -> Result<()> {
+        let from_shard = assignment
+            .committee
+            .iter()
+            .position(|&n| n == from)
+            .ok_or_else(|| anyhow::anyhow!("node {from} is not a committee member"))?;
+        if from_shard == about {
+            bail!("committee member {from} cannot score its own shard {about}");
+        }
+        if about >= assignment.committee.len() {
+            bail!("shard {about} does not exist");
+        }
+        if !value.is_finite() {
+            bail!("non-finite score");
+        }
+        chain.append(
+            vtime,
+            vec![Transaction::Score {
+                cycle,
+                from,
+                about,
+                value,
+            }],
+        );
+        Ok(())
+    }
+
+    /// Pure read: median the scores posted for `cycle` into per-shard
+    /// final scores (errors if any shard is unscored).  The orchestrator
+    /// calls this to learn the winners, aggregates their payloads, and
+    /// then calls [`Self::finalize`] with the resulting global digests.
+    pub fn tally(chain: &Chain, cycle: usize, shards: usize) -> Result<Vec<f64>> {
+        let mut per_shard: Vec<Vec<f64>> = vec![Vec::new(); shards];
+        for tx in chain.txs() {
+            if let Transaction::Score {
+                cycle: c,
+                about,
+                value,
+                ..
+            } = tx
+            {
+                if *c == cycle {
+                    per_shard[*about].push(*value);
+                }
+            }
+        }
+        per_shard
+            .iter()
+            .enumerate()
+            .map(|(i, scores)| {
+                if scores.is_empty() {
+                    bail!("no scores posted for shard {i} in cycle {cycle}");
+                }
+                Ok(committee::median(scores))
+            })
+            .collect()
+    }
+
+    /// Median the posted scores per shard, select winners, and record the
+    /// aggregation (global digests computed by the caller from the
+    /// winners' payloads).  Returns (winners, final_scores).
+    #[allow(clippy::too_many_arguments)]
+    pub fn finalize(
+        chain: &mut Chain,
+        vtime: f64,
+        cycle: usize,
+        shards: usize,
+        k: usize,
+        global_server: Digest,
+        global_client: Digest,
+    ) -> Result<(Vec<ShardId>, Vec<f64>)> {
+        let mut per_shard: Vec<Vec<f64>> = vec![Vec::new(); shards];
+        for tx in chain.txs() {
+            if let Transaction::Score {
+                cycle: c,
+                about,
+                value,
+                ..
+            } = tx
+            {
+                if *c == cycle {
+                    per_shard[*about].push(*value);
+                }
+            }
+        }
+        let mut final_scores = Vec::with_capacity(shards);
+        for (i, scores) in per_shard.iter().enumerate() {
+            if scores.is_empty() {
+                bail!("no scores posted for shard {i} in cycle {cycle}");
+            }
+            final_scores.push(committee::median(scores));
+        }
+        let winners = committee::select_top_k(&final_scores, k);
+        chain.append(
+            vtime,
+            vec![Transaction::Aggregation {
+                cycle,
+                winners: winners.clone(),
+                final_scores: final_scores.clone(),
+                global_server,
+                global_client,
+            }],
+        );
+        Ok((winners, final_scores))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Bundle, Tensor};
+
+    fn bundle(v: f32) -> Bundle {
+        Bundle::new(
+            vec!["w".into()],
+            vec![Tensor::new(vec![2], vec![v, v]).unwrap()],
+        )
+        .unwrap()
+    }
+
+    fn assignment() -> Assignment {
+        Assignment {
+            committee: vec![0, 1, 2],
+            clients: vec![vec![3, 4], vec![5, 6], vec![7, 8]],
+        }
+    }
+
+    #[test]
+    fn assign_nodes_records_partition() {
+        let mut chain = Chain::new();
+        let mut rng = Rng::new(1);
+        let a = AssignNodes::execute(
+            &mut chain,
+            0.0,
+            0,
+            9,
+            3,
+            2,
+            &[],
+            &vec![f64::INFINITY; 9],
+            true,
+            &mut rng,
+        )
+        .unwrap();
+        assert!(a.is_partition_of(9));
+        let back = AssignNodes::lookup(&chain, 0).unwrap();
+        assert_eq!(back, a);
+        chain.verify().unwrap();
+    }
+
+    #[test]
+    fn propose_rejects_unknown_payload_and_duplicates() {
+        let mut chain = Chain::new();
+        let mut store = ModelStore::new();
+        let d = store.put(bundle(1.0));
+        // unknown digest
+        assert!(ModelPropose::propose_server(
+            &mut chain, &store, 0.0, 0, 0, 0, [9u8; 32], 8
+        )
+        .is_err());
+        ModelPropose::propose_server(&mut chain, &store, 0.0, 0, 0, 0, d, 8).unwrap();
+        // duplicate
+        assert!(
+            ModelPropose::propose_server(&mut chain, &store, 0.0, 0, 0, 0, d, 8).is_err()
+        );
+    }
+
+    #[test]
+    fn collect_requires_all_server_models() {
+        let mut chain = Chain::new();
+        let mut store = ModelStore::new();
+        let d = store.put(bundle(1.0));
+        ModelPropose::propose_server(&mut chain, &store, 0.0, 0, 0, 0, d, 8).unwrap();
+        assert!(ModelPropose::collect(&chain, 0, 2).is_err()); // shard 1 missing
+        let got = ModelPropose::collect(&chain, 0, 1).unwrap();
+        assert_eq!(got[0].0, d);
+    }
+
+    #[test]
+    fn scoring_rules() {
+        let mut chain = Chain::new();
+        let a = assignment();
+        // non-member
+        assert!(
+            EvaluationPropose::post_score(&mut chain, 0.0, 0, &a, 5, 0, 0.5).is_err()
+        );
+        // self-score
+        assert!(
+            EvaluationPropose::post_score(&mut chain, 0.0, 0, &a, 0, 0, 0.5).is_err()
+        );
+        // NaN
+        assert!(EvaluationPropose::post_score(
+            &mut chain, 0.0, 0, &a, 0, 1, f64::NAN
+        )
+        .is_err());
+        EvaluationPropose::post_score(&mut chain, 0.0, 0, &a, 0, 1, 0.5).unwrap();
+    }
+
+    #[test]
+    fn finalize_medians_and_selects() {
+        let mut chain = Chain::new();
+        let a = assignment();
+        // shard 0 judged by members 1,2; shard 1 by 0,2; shard 2 by 0,1
+        EvaluationPropose::post_score(&mut chain, 0.0, 0, &a, 1, 0, 0.2).unwrap();
+        EvaluationPropose::post_score(&mut chain, 0.0, 0, &a, 2, 0, 0.4).unwrap();
+        EvaluationPropose::post_score(&mut chain, 0.0, 0, &a, 0, 1, 0.9).unwrap();
+        EvaluationPropose::post_score(&mut chain, 0.0, 0, &a, 2, 1, 0.8).unwrap();
+        EvaluationPropose::post_score(&mut chain, 0.0, 0, &a, 0, 2, 0.1).unwrap();
+        EvaluationPropose::post_score(&mut chain, 0.0, 0, &a, 1, 2, 0.15).unwrap();
+        let (winners, finals) =
+            EvaluationPropose::finalize(&mut chain, 1.0, 0, 3, 2, [0; 32], [1u8; 32])
+                .unwrap();
+        assert_eq!(winners, vec![2, 0]); // 0.125 < 0.3 < 0.85
+        assert!((finals[0] - 0.3).abs() < 1e-12);
+        chain.verify().unwrap();
+    }
+
+    #[test]
+    fn finalize_requires_scores() {
+        let mut chain = Chain::new();
+        assert!(EvaluationPropose::finalize(&mut chain, 0.0, 0, 2, 1, [0; 32], [0; 32])
+            .is_err());
+    }
+}

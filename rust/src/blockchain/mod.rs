@@ -1,0 +1,30 @@
+//! Blockchain substrate for BSFL.
+//!
+//! The paper runs its three chaincodes on Hyperledger Fabric; this module
+//! is the purpose-built equivalent (DESIGN.md §1): a SHA-256 hash-chained
+//! block ledger with a transaction log, a model store (the chain carries
+//! digests, the store carries weight payloads — the standard off-chain
+//! storage pattern), the paper's three smart contracts, and the
+//! committee-consensus engine (median scoring, top-K winner selection,
+//! rotation-aware committee election).
+//!
+//! * [`block`] / [`chain`] — tamper-evident ledger.
+//! * [`tx`] — transaction types written by the contracts.
+//! * [`store`] — digest-addressed model payload store.
+//! * [`contracts`] — `AssignNodes`, `ModelPropose`, `EvaluationPropose`.
+//! * [`committee`] — scoring/median/top-K/election logic shared by the
+//!   contracts (pure functions, heavily property-tested).
+
+pub mod block;
+pub mod chain;
+pub mod committee;
+pub mod contracts;
+pub mod store;
+pub mod tx;
+
+pub use block::Block;
+pub use chain::Chain;
+pub use committee::{elect_committee, median, select_top_k};
+pub use contracts::{AssignNodes, EvaluationPropose, ModelPropose};
+pub use store::ModelStore;
+pub use tx::{Digest, NodeId, ShardId, Transaction};

@@ -1,0 +1,96 @@
+//! Digest-addressed model payload store (the "off-chain" half of the
+//! ledger).
+//!
+//! Transactions carry 32-byte digests; the store resolves them to weight
+//! bundles.  `get` re-verifies the digest on every fetch, so a store
+//! compromised between propose and aggregate is detected — this is the
+//! model-integrity property BSFL's evaluation relies on.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::tx::Digest;
+use crate::tensor::Bundle;
+
+/// Content-addressed bundle storage.
+#[derive(Clone, Debug, Default)]
+pub struct ModelStore {
+    items: HashMap<Digest, Bundle>,
+}
+
+impl ModelStore {
+    pub fn new() -> ModelStore {
+        ModelStore::default()
+    }
+
+    /// Insert a bundle, returning its digest.
+    pub fn put(&mut self, bundle: Bundle) -> Digest {
+        let d = bundle.digest();
+        self.items.insert(d, bundle);
+        d
+    }
+
+    /// Fetch and integrity-check a bundle.
+    pub fn get(&self, digest: &Digest) -> Result<&Bundle> {
+        match self.items.get(digest) {
+            None => bail!("model {digest:02x?} not in store"),
+            Some(b) => {
+                if b.digest() != *digest {
+                    bail!("store integrity violation for {digest:02x?}");
+                }
+                Ok(b)
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Drop everything (between experiments).
+    pub fn clear(&mut self) {
+        self.items.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn bundle(v: f32) -> Bundle {
+        Bundle::new(
+            vec!["w".into()],
+            vec![Tensor::new(vec![2], vec![v, v + 1.0]).unwrap()],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut s = ModelStore::new();
+        let b = bundle(1.0);
+        let d = s.put(b.clone());
+        assert_eq!(s.get(&d).unwrap(), &b);
+    }
+
+    #[test]
+    fn unknown_digest_errors() {
+        let s = ModelStore::new();
+        assert!(s.get(&[9u8; 32]).is_err());
+    }
+
+    #[test]
+    fn same_content_same_digest() {
+        let mut s = ModelStore::new();
+        let d1 = s.put(bundle(1.0));
+        let d2 = s.put(bundle(1.0));
+        assert_eq!(d1, d2);
+        assert_eq!(s.len(), 1);
+    }
+}

@@ -1,0 +1,201 @@
+//! Ledger transaction types.
+//!
+//! Model payloads never ride in transactions — only their SHA-256
+//! digests; [`super::store::ModelStore`] resolves digest -> weights (the
+//! off-chain storage pattern; Fabric deployments do the same with a CAS
+//! or IPFS sidecar).
+
+use sha2::{Digest as _, Sha256};
+
+/// 32-byte SHA-256 digest of a serialized model bundle.
+pub type Digest = [u8; 32];
+
+/// Node identifier (stable across cycles).
+pub type NodeId = usize;
+
+/// Shard index within a cycle.
+pub type ShardId = usize;
+
+/// Everything the three contracts write to the ledger.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Transaction {
+    /// AssignNodes output: the cycle's topology.
+    Assignment {
+        cycle: usize,
+        /// committee[i] is the server node of shard i.
+        committee: Vec<NodeId>,
+        /// clients[i] lists the client nodes of shard i.
+        clients: Vec<Vec<NodeId>>,
+    },
+    /// A shard server proposing its trained server-side model.
+    ServerModel {
+        cycle: usize,
+        shard: ShardId,
+        server: NodeId,
+        digest: Digest,
+        bytes: usize,
+    },
+    /// A client proposing its trained client-side model.
+    ClientModel {
+        cycle: usize,
+        shard: ShardId,
+        client: NodeId,
+        digest: Digest,
+        bytes: usize,
+    },
+    /// One committee member's validation score for one shard's update.
+    Score {
+        cycle: usize,
+        /// The judging committee member.
+        from: NodeId,
+        /// The shard whose models were evaluated.
+        about: ShardId,
+        /// Validation loss on the judge's local data (lower is better).
+        value: f64,
+    },
+    /// EvaluationPropose output: winners and the new global models.
+    Aggregation {
+        cycle: usize,
+        /// Shards whose updates were aggregated (top-K by median score).
+        winners: Vec<ShardId>,
+        /// Median score per shard, index-aligned with shard id.
+        final_scores: Vec<f64>,
+        global_server: Digest,
+        global_client: Digest,
+    },
+}
+
+impl Transaction {
+    /// Stable byte encoding for hashing into the block chain.
+    pub fn canonical_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Transaction::Assignment {
+                cycle,
+                committee,
+                clients,
+            } => {
+                out.push(0);
+                out.extend((*cycle as u64).to_le_bytes());
+                for &n in committee {
+                    out.extend((n as u64).to_le_bytes());
+                }
+                out.push(0xff);
+                for shard in clients {
+                    for &n in shard {
+                        out.extend((n as u64).to_le_bytes());
+                    }
+                    out.push(0xfe);
+                }
+            }
+            Transaction::ServerModel {
+                cycle,
+                shard,
+                server,
+                digest,
+                bytes,
+            } => {
+                out.push(1);
+                out.extend((*cycle as u64).to_le_bytes());
+                out.extend((*shard as u64).to_le_bytes());
+                out.extend((*server as u64).to_le_bytes());
+                out.extend(digest);
+                out.extend((*bytes as u64).to_le_bytes());
+            }
+            Transaction::ClientModel {
+                cycle,
+                shard,
+                client,
+                digest,
+                bytes,
+            } => {
+                out.push(2);
+                out.extend((*cycle as u64).to_le_bytes());
+                out.extend((*shard as u64).to_le_bytes());
+                out.extend((*client as u64).to_le_bytes());
+                out.extend(digest);
+                out.extend((*bytes as u64).to_le_bytes());
+            }
+            Transaction::Score {
+                cycle,
+                from,
+                about,
+                value,
+            } => {
+                out.push(3);
+                out.extend((*cycle as u64).to_le_bytes());
+                out.extend((*from as u64).to_le_bytes());
+                out.extend((*about as u64).to_le_bytes());
+                out.extend(value.to_le_bytes());
+            }
+            Transaction::Aggregation {
+                cycle,
+                winners,
+                final_scores,
+                global_server,
+                global_client,
+            } => {
+                out.push(4);
+                out.extend((*cycle as u64).to_le_bytes());
+                for &w in winners {
+                    out.extend((w as u64).to_le_bytes());
+                }
+                out.push(0xff);
+                for &s in final_scores {
+                    out.extend(s.to_le_bytes());
+                }
+                out.extend(global_server);
+                out.extend(global_client);
+            }
+        }
+        out
+    }
+
+    /// Wire size used by netsim when this tx propagates to the committee.
+    pub fn wire_bytes(&self) -> usize {
+        self.canonical_bytes().len()
+    }
+
+    pub fn hash(&self) -> Digest {
+        let mut h = Sha256::new();
+        h.update(self.canonical_bytes());
+        h.finalize().into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn score(v: f64) -> Transaction {
+        Transaction::Score {
+            cycle: 1,
+            from: 2,
+            about: 3,
+            value: v,
+        }
+    }
+
+    #[test]
+    fn canonical_bytes_distinguish_payloads() {
+        assert_ne!(score(0.5).hash(), score(0.6).hash());
+        assert_eq!(score(0.5).hash(), score(0.5).hash());
+    }
+
+    #[test]
+    fn tx_kinds_have_distinct_tags() {
+        let a = Transaction::Assignment {
+            cycle: 0,
+            committee: vec![1],
+            clients: vec![vec![2]],
+        };
+        let s = Transaction::ServerModel {
+            cycle: 0,
+            shard: 0,
+            server: 1,
+            digest: [0; 32],
+            bytes: 10,
+        };
+        assert_ne!(a.hash(), s.hash());
+    }
+}

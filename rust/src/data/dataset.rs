@@ -1,0 +1,195 @@
+//! Flat-storage image dataset and padded batch iteration.
+
+use anyhow::{bail, Result};
+
+use super::{CLASSES, PIXELS};
+use crate::util::rng::Rng;
+
+/// A labelled image dataset in flat row-major f32 storage (NHWC with C=1).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    images: Vec<f32>, // n * PIXELS
+    labels: Vec<i32>, // n
+}
+
+impl Dataset {
+    pub fn new(images: Vec<f32>, labels: Vec<i32>) -> Result<Dataset> {
+        if images.len() != labels.len() * PIXELS {
+            bail!(
+                "{} pixels for {} labels (want {})",
+                images.len(),
+                labels.len(),
+                labels.len() * PIXELS
+            );
+        }
+        if let Some(&bad) = labels.iter().find(|&&l| l < 0 || l >= CLASSES as i32) {
+            bail!("label {bad} out of range");
+        }
+        Ok(Dataset { images, labels })
+    }
+
+    pub fn empty() -> Dataset {
+        Dataset {
+            images: Vec::new(),
+            labels: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * PIXELS..(i + 1) * PIXELS]
+    }
+
+    pub fn label(&self, i: usize) -> i32 {
+        self.labels[i]
+    }
+
+    pub fn labels(&self) -> &[i32] {
+        &self.labels
+    }
+
+    /// Class histogram (used by partition tests and non-IID diagnostics).
+    pub fn class_counts(&self) -> [usize; CLASSES] {
+        let mut c = [0usize; CLASSES];
+        for &l in &self.labels {
+            c[l as usize] += 1;
+        }
+        c
+    }
+
+    /// Copy selected rows into a new dataset.
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let mut images = Vec::with_capacity(idx.len() * PIXELS);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            images.extend_from_slice(self.image(i));
+            labels.push(self.labels[i]);
+        }
+        Dataset { images, labels }
+    }
+
+    pub fn shuffle(&mut self, rng: &mut Rng) {
+        let mut order: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut order);
+        *self = self.subset(&order);
+    }
+
+    pub fn truncate(&mut self, n: usize) {
+        if n < self.len() {
+            self.images.truncate(n * PIXELS);
+            self.labels.truncate(n);
+        }
+    }
+
+    /// Append another dataset's rows.
+    pub fn extend(&mut self, other: &Dataset) {
+        self.images.extend_from_slice(&other.images);
+        self.labels.extend_from_slice(&other.labels);
+    }
+
+    /// Iterate fixed-size batches, padding the tail with zero-weight rows.
+    pub fn batches(&self, batch: usize) -> BatchIter<'_> {
+        BatchIter {
+            ds: self,
+            batch,
+            pos: 0,
+        }
+    }
+}
+
+/// One padded batch ready for the PJRT boundary.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// (B, 28, 28, 1) flattened.
+    pub x: Vec<f32>,
+    /// (B,) labels, 0 for pad rows.
+    pub y: Vec<i32>,
+    /// (B,) 1.0 for real rows, 0.0 for padding.
+    pub w: Vec<f32>,
+    /// Number of real rows.
+    pub real: usize,
+}
+
+/// Iterator over padded fixed-size batches.
+pub struct BatchIter<'a> {
+    ds: &'a Dataset,
+    batch: usize,
+    pos: usize,
+}
+
+impl<'a> Iterator for BatchIter<'a> {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        if self.pos >= self.ds.len() {
+            return None;
+        }
+        let real = (self.ds.len() - self.pos).min(self.batch);
+        let mut x = vec![0.0f32; self.batch * PIXELS];
+        let mut y = vec![0i32; self.batch];
+        let mut w = vec![0.0f32; self.batch];
+        for j in 0..real {
+            let i = self.pos + j;
+            x[j * PIXELS..(j + 1) * PIXELS].copy_from_slice(self.ds.image(i));
+            y[j] = self.ds.label(i);
+            w[j] = 1.0;
+        }
+        self.pos += real;
+        Some(Batch { x, y, w, real })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(n: usize) -> Dataset {
+        let images = (0..n * PIXELS).map(|i| i as f32).collect();
+        let labels = (0..n).map(|i| (i % CLASSES) as i32).collect();
+        Dataset::new(images, labels).unwrap()
+    }
+
+    #[test]
+    fn validates_lengths_and_labels() {
+        assert!(Dataset::new(vec![0.0; PIXELS], vec![0]).is_ok());
+        assert!(Dataset::new(vec![0.0; PIXELS - 1], vec![0]).is_err());
+        assert!(Dataset::new(vec![0.0; PIXELS], vec![10]).is_err());
+    }
+
+    #[test]
+    fn batching_pads_tail() {
+        let ds = tiny(10);
+        let batches: Vec<Batch> = ds.batches(4).collect();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].real, 4);
+        assert_eq!(batches[2].real, 2);
+        assert_eq!(batches[2].w, vec![1.0, 1.0, 0.0, 0.0]);
+        // padded rows are zeros
+        assert!(batches[2].x[2 * PIXELS..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn subset_and_counts() {
+        let ds = tiny(20);
+        let sub = ds.subset(&[0, 10, 5]);
+        assert_eq!(sub.len(), 3);
+        assert_eq!(sub.label(1), ds.label(10));
+        let counts = ds.class_counts();
+        assert_eq!(counts.iter().sum::<usize>(), 20);
+    }
+
+    #[test]
+    fn shuffle_preserves_multiset() {
+        let mut ds = tiny(50);
+        let before = ds.class_counts();
+        ds.shuffle(&mut Rng::new(1));
+        assert_eq!(ds.class_counts(), before);
+    }
+}

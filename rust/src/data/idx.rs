@@ -1,0 +1,146 @@
+//! IDX (MNIST/Fashion-MNIST) file format loader.
+//!
+//! If the four canonical files are present under a directory, the real
+//! dataset is used instead of the synthetic generator:
+//!
+//! ```text
+//! train-images-idx3-ubyte   t10k-images-idx3-ubyte
+//! train-labels-idx1-ubyte   t10k-labels-idx1-ubyte
+//! ```
+//!
+//! Pixels are scaled to [0,1] then standardized per image to match the
+//! synthetic pipeline.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Dataset, IMG, PIXELS};
+
+const MAGIC_IMAGES: u32 = 0x0000_0803;
+const MAGIC_LABELS: u32 = 0x0000_0801;
+
+fn be_u32(b: &[u8]) -> u32 {
+    u32::from_be_bytes([b[0], b[1], b[2], b[3]])
+}
+
+/// Parse an idx3-ubyte image file into standardized f32 pixels.
+pub fn parse_images(bytes: &[u8]) -> Result<Vec<f32>> {
+    if bytes.len() < 16 {
+        bail!("truncated idx3 header");
+    }
+    if be_u32(&bytes[0..4]) != MAGIC_IMAGES {
+        bail!("bad idx3 magic {:#x}", be_u32(&bytes[0..4]));
+    }
+    let n = be_u32(&bytes[4..8]) as usize;
+    let rows = be_u32(&bytes[8..12]) as usize;
+    let cols = be_u32(&bytes[12..16]) as usize;
+    if rows != IMG || cols != IMG {
+        bail!("expected {IMG}x{IMG} images, got {rows}x{cols}");
+    }
+    let want = 16 + n * PIXELS;
+    if bytes.len() != want {
+        bail!("idx3 length {} != expected {}", bytes.len(), want);
+    }
+    let mut out = Vec::with_capacity(n * PIXELS);
+    for img in bytes[16..].chunks_exact(PIXELS) {
+        let raw: Vec<f32> = img.iter().map(|&b| b as f32 / 255.0).collect();
+        let mean = raw.iter().sum::<f32>() / PIXELS as f32;
+        let var =
+            raw.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / PIXELS as f32;
+        let inv = 1.0 / var.sqrt().max(1e-6);
+        out.extend(raw.iter().map(|v| (v - mean) * inv));
+    }
+    Ok(out)
+}
+
+/// Parse an idx1-ubyte label file.
+pub fn parse_labels(bytes: &[u8]) -> Result<Vec<i32>> {
+    if bytes.len() < 8 {
+        bail!("truncated idx1 header");
+    }
+    if be_u32(&bytes[0..4]) != MAGIC_LABELS {
+        bail!("bad idx1 magic {:#x}", be_u32(&bytes[0..4]));
+    }
+    let n = be_u32(&bytes[4..8]) as usize;
+    if bytes.len() != 8 + n {
+        bail!("idx1 length {} != expected {}", bytes.len(), 8 + n);
+    }
+    Ok(bytes[8..].iter().map(|&b| b as i32).collect())
+}
+
+fn load_pair(dir: &Path, images: &str, labels: &str) -> Result<Dataset> {
+    let ib = std::fs::read(dir.join(images))
+        .with_context(|| format!("reading {images}"))?;
+    let lb = std::fs::read(dir.join(labels))
+        .with_context(|| format!("reading {labels}"))?;
+    Dataset::new(parse_images(&ib)?, parse_labels(&lb)?)
+}
+
+/// Load the train/test pair from `dir` (errors if files are absent —
+/// callers fall back to the synthetic generator).
+pub fn load_fashion_mnist(dir: &Path) -> Result<(Dataset, Dataset)> {
+    let train = load_pair(dir, "train-images-idx3-ubyte", "train-labels-idx1-ubyte")?;
+    let test = load_pair(dir, "t10k-images-idx3-ubyte", "t10k-labels-idx1-ubyte")?;
+    Ok((train, test))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_images(n: usize) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&MAGIC_IMAGES.to_be_bytes());
+        b.extend_from_slice(&(n as u32).to_be_bytes());
+        b.extend_from_slice(&(IMG as u32).to_be_bytes());
+        b.extend_from_slice(&(IMG as u32).to_be_bytes());
+        for i in 0..n * PIXELS {
+            b.push((i % 251) as u8);
+        }
+        b
+    }
+
+    fn fake_labels(n: usize) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&MAGIC_LABELS.to_be_bytes());
+        b.extend_from_slice(&(n as u32).to_be_bytes());
+        for i in 0..n {
+            b.push((i % 10) as u8);
+        }
+        b
+    }
+
+    #[test]
+    fn parses_wellformed_files() {
+        let imgs = parse_images(&fake_images(3)).unwrap();
+        assert_eq!(imgs.len(), 3 * PIXELS);
+        let labels = parse_labels(&fake_labels(3)).unwrap();
+        assert_eq!(labels, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_lengths() {
+        let mut bad = fake_images(2);
+        bad[0] = 0xff;
+        assert!(parse_images(&bad).is_err());
+        let mut short = fake_images(2);
+        short.truncate(short.len() - 1);
+        assert!(parse_images(&short).is_err());
+        let mut badl = fake_labels(2);
+        badl[3] = 0x07;
+        assert!(parse_labels(&badl).is_err());
+    }
+
+    #[test]
+    fn images_are_standardized() {
+        let imgs = parse_images(&fake_images(1)).unwrap();
+        let mean = imgs.iter().sum::<f32>() / PIXELS as f32;
+        assert!(mean.abs() < 1e-3);
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(load_fashion_mnist(Path::new("/nonexistent/xyz")).is_err());
+    }
+}

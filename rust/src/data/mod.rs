@@ -1,0 +1,61 @@
+//! Datasets: synthetic Fashion-MNIST stand-in, real IDX loading, non-IID
+//! partitioning, and batching.
+//!
+//! The paper trains on Fashion-MNIST (60k 28x28 grayscale, 10 classes)
+//! with equal-size non-IID local datasets per node.  This module provides:
+//!
+//! * [`synthetic`] — the substitution dataset (DESIGN.md §1): 10
+//!   parametric class archetypes + affine jitter + noise, deterministic
+//!   from a seed.
+//! * [`idx`] — an IDX-format loader so genuine Fashion-MNIST files are
+//!   picked up automatically when present under `data/fashion-mnist/`.
+//! * [`partition`] — label-sharded and Dirichlet non-IID splits.
+//! * [`Dataset`] / [`BatchIter`] — flat f32 storage and padded batching
+//!   (pad rows carry weight 0, matching the L2 `wts` mask).
+
+mod dataset;
+pub mod idx;
+pub mod partition;
+pub mod synthetic;
+
+pub use dataset::{Batch, BatchIter, Dataset};
+
+use crate::util::rng::Rng;
+
+/// Image side length (H = W).
+pub const IMG: usize = 28;
+/// Pixels per image.
+pub const PIXELS: usize = IMG * IMG;
+/// Number of classes.
+pub const CLASSES: usize = 10;
+
+/// Load the training+test data: real Fashion-MNIST if `data_dir` holds the
+/// IDX files, otherwise the synthetic generator.
+///
+/// Returns (train, test).
+pub fn load_or_synthesize(
+    data_dir: &std::path::Path,
+    train_n: usize,
+    test_n: usize,
+    seed: u64,
+) -> (Dataset, Dataset) {
+    match idx::load_fashion_mnist(data_dir) {
+        Ok((mut train, mut test)) => {
+            crate::info!(
+                "loaded real Fashion-MNIST from {}",
+                data_dir.display()
+            );
+            let mut rng = Rng::new(seed);
+            train.shuffle(&mut rng);
+            test.shuffle(&mut rng);
+            train.truncate(train_n);
+            test.truncate(test_n);
+            (train, test)
+        }
+        Err(_) => {
+            let train = synthetic::generate(train_n, seed);
+            let test = synthetic::generate(test_n, seed ^ 0x5EED_7E57);
+            (train, test)
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Non-IID partitioning of a dataset across nodes.
+//!
+//! The paper gives each node an equal number of images (6,666 of 60k)
+//! with non-IID class skew.  Two standard schemes are provided:
+//!
+//! * [`label_sharded`] — sort by label, slice into `nodes * shards_per_node`
+//!   contiguous runs, deal each node `shards_per_node` runs (McMahan et
+//!   al.'s classic pathological non-IID split; each node sees ~2 classes
+//!   with the default).
+//! * [`dirichlet`] — per-class Dirichlet(alpha) allocation (Hsu et al.),
+//!   with `alpha` controlling skew (0.1 = extreme, 100 = near-IID), then
+//!   rebalanced so every node gets exactly `n/nodes` samples as in the
+//!   paper.
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// Pathological label-sharded split: each node receives
+/// `shards_per_node` contiguous label runs.  Every node gets exactly
+/// `ds.len() / nodes` samples (remainder dropped, as the paper's equal
+/// 6,666-image splits do).
+pub fn label_sharded(
+    ds: &Dataset,
+    nodes: usize,
+    shards_per_node: usize,
+    rng: &mut Rng,
+) -> Vec<Dataset> {
+    assert!(nodes > 0 && shards_per_node > 0);
+    let per_node = ds.len() / nodes;
+    let total_shards = nodes * shards_per_node;
+    let shard_size = ds.len() / total_shards;
+    assert!(shard_size > 0, "dataset too small for {total_shards} shards");
+
+    // stable sort indices by label
+    let mut order: Vec<usize> = (0..ds.len()).collect();
+    order.sort_by_key(|&i| ds.label(i));
+
+    let mut shard_ids: Vec<usize> = (0..total_shards).collect();
+    rng.shuffle(&mut shard_ids);
+
+    (0..nodes)
+        .map(|node| {
+            let mut idx = Vec::with_capacity(per_node);
+            for s in 0..shards_per_node {
+                let shard = shard_ids[node * shards_per_node + s];
+                let lo = shard * shard_size;
+                idx.extend_from_slice(&order[lo..lo + shard_size]);
+            }
+            let mut sub = ds.subset(&idx);
+            sub.shuffle(rng);
+            sub.truncate(per_node);
+            sub
+        })
+        .collect()
+}
+
+/// Dirichlet(alpha) non-IID split, rebalanced to equal-size local sets.
+pub fn dirichlet(ds: &Dataset, nodes: usize, alpha: f64, rng: &mut Rng) -> Vec<Dataset> {
+    assert!(nodes > 0 && alpha > 0.0);
+    let per_node = ds.len() / nodes;
+
+    // class -> sample indices (shuffled)
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); super::CLASSES];
+    for i in 0..ds.len() {
+        by_class[ds.label(i) as usize].push(i);
+    }
+    for c in &mut by_class {
+        rng.shuffle(c);
+    }
+
+    // deal each class to nodes by a Dirichlet draw
+    let mut assigned: Vec<Vec<usize>> = vec![Vec::new(); nodes];
+    for class_idx in by_class {
+        let props = rng.dirichlet(alpha, nodes);
+        let n = class_idx.len();
+        let mut start = 0usize;
+        for (node, p) in props.iter().enumerate() {
+            let take = if node + 1 == nodes {
+                n - start
+            } else {
+                ((p * n as f64).round() as usize).min(n - start)
+            };
+            assigned[node].extend_from_slice(&class_idx[start..start + take]);
+            start += take;
+        }
+    }
+
+    // rebalance to exactly per_node each: overflow nodes donate their
+    // tail to underflow nodes.
+    let mut spare: Vec<usize> = Vec::new();
+    for a in &mut assigned {
+        rng.shuffle(a);
+        while a.len() > per_node {
+            spare.push(a.pop().unwrap());
+        }
+    }
+    for a in &mut assigned {
+        while a.len() < per_node {
+            match spare.pop() {
+                Some(i) => a.push(i),
+                None => break,
+            }
+        }
+    }
+
+    assigned
+        .into_iter()
+        .map(|idx| {
+            let mut sub = ds.subset(&idx);
+            sub.shuffle(rng);
+            sub
+        })
+        .collect()
+}
+
+/// Non-IID skew diagnostic: mean over nodes of the fraction held by the
+/// two most common classes (1.0 = pathological two-class nodes, ~0.2 =
+/// IID for 10 classes).
+pub fn skew(parts: &[Dataset]) -> f64 {
+    let mut total = 0.0;
+    for p in parts {
+        let mut counts = p.class_counts();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top2 = counts[0] + counts[1];
+        total += top2 as f64 / p.len().max(1) as f64;
+    }
+    total / parts.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn label_sharded_equal_sizes_and_skew() {
+        let ds = synthetic::generate(2000, 1);
+        let parts = label_sharded(&ds, 10, 2, &mut Rng::new(2));
+        assert_eq!(parts.len(), 10);
+        for p in &parts {
+            assert_eq!(p.len(), 200);
+        }
+        // pathological split: ~2 classes per node
+        assert!(skew(&parts) > 0.9, "skew {}", skew(&parts));
+    }
+
+    #[test]
+    fn label_sharded_partitions_equal_sized() {
+        // every node gets the same count: shards_per_node full label runs,
+        // capped at len/nodes.
+        let ds = synthetic::generate(1000, 3);
+        let parts = label_sharded(&ds, 9, 2, &mut Rng::new(4));
+        let per = (1000 / 9).min(2 * (1000 / 18));
+        for p in &parts {
+            assert_eq!(p.len(), per);
+        }
+    }
+
+    #[test]
+    fn dirichlet_sizes_and_alpha_effect() {
+        let ds = synthetic::generate(2000, 5);
+        let skewed = dirichlet(&ds, 10, 0.1, &mut Rng::new(6));
+        let near_iid = dirichlet(&ds, 10, 100.0, &mut Rng::new(6));
+        for p in skewed.iter().chain(near_iid.iter()) {
+            assert_eq!(p.len(), 200);
+        }
+        assert!(
+            skew(&skewed) > skew(&near_iid) + 0.1,
+            "alpha ordering: {} vs {}",
+            skew(&skewed),
+            skew(&near_iid)
+        );
+    }
+
+    #[test]
+    fn deterministic_in_rng_seed() {
+        let ds = synthetic::generate(500, 7);
+        let a = label_sharded(&ds, 5, 2, &mut Rng::new(9));
+        let b = label_sharded(&ds, 5, 2, &mut Rng::new(9));
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.labels(), y.labels());
+        }
+    }
+}

@@ -1,0 +1,275 @@
+//! Synthetic Fashion-MNIST stand-in (DESIGN.md §1 substitution).
+//!
+//! Ten parametric 28x28 grayscale archetypes — one per class — each
+//! rendered with per-sample jitter so the task is learnable but not
+//! trivial for the paper's 2-conv CNN:
+//!
+//! | class | archetype            | jittered parameters            |
+//! |-------|----------------------|--------------------------------|
+//! | 0     | horizontal stripes   | period, phase, tilt            |
+//! | 1     | vertical stripes     | period, phase, tilt            |
+//! | 2     | checkerboard         | period, phase                  |
+//! | 3     | filled disk          | center, radius                 |
+//! | 4     | ring                 | center, radius, thickness      |
+//! | 5     | diagonal gradient    | direction, offset              |
+//! | 6     | cross                | center, arm width              |
+//! | 7     | gaussian blob        | center, spread (anisotropic)   |
+//! | 8     | diamond outline      | center, size                   |
+//! | 9     | radial sinusoid      | center, frequency, phase       |
+//!
+//! Every pixel then gets additive Gaussian noise and a random global
+//! contrast/brightness shift; images are standardized to zero mean / unit
+//! variance per image, mirroring the torchvision normalization pipeline
+//! the paper's PyTorch nodes would use.
+
+use super::{Dataset, CLASSES, IMG, PIXELS};
+use crate::util::rng::Rng;
+
+/// Pixel-noise standard deviation: high enough that per-image loss stays
+/// non-degenerate, low enough that classes remain separable.
+const NOISE_STD: f32 = 0.20;
+
+/// Generate `n` samples with balanced class counts, deterministic in
+/// `seed`.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut images = Vec::with_capacity(n * PIXELS);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = (i % CLASSES) as i32;
+        images.extend_from_slice(&render(class as usize, &mut rng));
+        labels.push(class);
+    }
+    let mut ds = Dataset::new(images, labels).expect("synthetic gen invariant");
+    ds.shuffle(&mut rng);
+    ds
+}
+
+/// Generate `n` samples of a single class (attack tooling + tests).
+pub fn generate_class(n: usize, class: usize, seed: u64) -> Dataset {
+    assert!(class < CLASSES);
+    let mut rng = Rng::new(seed);
+    let mut images = Vec::with_capacity(n * PIXELS);
+    let labels = vec![class as i32; n];
+    for _ in 0..n {
+        images.extend_from_slice(&render(class, &mut rng));
+    }
+    Dataset::new(images, labels).expect("synthetic gen invariant")
+}
+
+/// Render one image of `class` with fresh jitter.
+pub fn render(class: usize, rng: &mut Rng) -> [f32; PIXELS] {
+    let mut img = [0.0f32; PIXELS];
+    // jittered center for the centered archetypes
+    let cx = 13.5 + rng.normal_f32(0.0, 1.2);
+    let cy = 13.5 + rng.normal_f32(0.0, 1.2);
+
+    match class {
+        0 | 1 => {
+            // stripes: period 3..7 px, random phase, slight tilt
+            let period = 4.0 + 2.5 * rng.f32();
+            let phase = rng.f32() * period;
+            let tilt = rng.normal_f32(0.0, 0.06);
+            for y in 0..IMG {
+                for x in 0..IMG {
+                    let t = if class == 0 {
+                        y as f32 + tilt * x as f32
+                    } else {
+                        x as f32 + tilt * y as f32
+                    };
+                    let v = ((t + phase) / period * std::f32::consts::TAU).sin();
+                    img[y * IMG + x] = if v > 0.0 { 1.0 } else { 0.0 };
+                }
+            }
+        }
+        2 => {
+            let period = 5.0 + 2.5 * rng.f32();
+            let px = rng.f32() * period;
+            let py = rng.f32() * period;
+            for y in 0..IMG {
+                for x in 0..IMG {
+                    let a = (((x as f32 + px) / period) as i32) & 1;
+                    let b = (((y as f32 + py) / period) as i32) & 1;
+                    img[y * IMG + x] = if a ^ b == 1 { 1.0 } else { 0.0 };
+                }
+            }
+        }
+        3 => {
+            let r = 7.0 + 2.5 * rng.f32();
+            for y in 0..IMG {
+                for x in 0..IMG {
+                    let d = dist(x, y, cx, cy);
+                    img[y * IMG + x] = sigmoid(r - d);
+                }
+            }
+        }
+        4 => {
+            let r = 8.0 + 2.5 * rng.f32();
+            let thick = 1.5 + 1.5 * rng.f32();
+            for y in 0..IMG {
+                for x in 0..IMG {
+                    let d = (dist(x, y, cx, cy) - r).abs();
+                    img[y * IMG + x] = sigmoid(thick - d);
+                }
+            }
+        }
+        5 => {
+            let theta = rng.f32() * std::f32::consts::TAU;
+            let (s, c) = theta.sin_cos();
+            let off = rng.normal_f32(0.0, 2.5);
+            for y in 0..IMG {
+                for x in 0..IMG {
+                    let t = (x as f32 - 13.5) * c + (y as f32 - 13.5) * s + off;
+                    img[y * IMG + x] = (t / 28.0 + 0.5).clamp(0.0, 1.0);
+                }
+            }
+        }
+        6 => {
+            let wdt = 2.0 + 2.0 * rng.f32();
+            for y in 0..IMG {
+                for x in 0..IMG {
+                    let dx = (x as f32 - cx).abs();
+                    let dy = (y as f32 - cy).abs();
+                    let v = sigmoid(wdt - dx).max(sigmoid(wdt - dy));
+                    img[y * IMG + x] = v;
+                }
+            }
+        }
+        7 => {
+            let sx = 3.0 + 2.0 * rng.f32();
+            let sy = 3.0 + 2.0 * rng.f32();
+            for y in 0..IMG {
+                for x in 0..IMG {
+                    let dx = (x as f32 - cx) / sx;
+                    let dy = (y as f32 - cy) / sy;
+                    img[y * IMG + x] = (-0.5 * (dx * dx + dy * dy)).exp();
+                }
+            }
+        }
+        8 => {
+            let size = 8.0 + 3.0 * rng.f32();
+            for y in 0..IMG {
+                for x in 0..IMG {
+                    let d = ((x as f32 - cx).abs() + (y as f32 - cy).abs() - size).abs();
+                    img[y * IMG + x] = sigmoid(1.8 - d);
+                }
+            }
+        }
+        9 => {
+            let freq = 0.6 + 0.5 * rng.f32();
+            let phase = rng.f32() * std::f32::consts::TAU;
+            for y in 0..IMG {
+                for x in 0..IMG {
+                    let d = dist(x, y, cx, cy);
+                    img[y * IMG + x] = 0.5 + 0.5 * (d * freq + phase).sin();
+                }
+            }
+        }
+        _ => panic!("class {class} out of range"),
+    }
+
+    // global contrast/brightness jitter + pixel noise
+    let gain = 0.85 + 0.3 * rng.f32();
+    let bias = rng.normal_f32(0.0, 0.05);
+    for v in &mut img {
+        *v = *v * gain + bias + rng.normal_f32(0.0, NOISE_STD);
+    }
+
+    // per-image standardization
+    let mean = img.iter().sum::<f32>() / PIXELS as f32;
+    let var = img.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / PIXELS as f32;
+    let inv = 1.0 / var.sqrt().max(1e-6);
+    for v in &mut img {
+        *v = (*v - mean) * inv;
+    }
+    img
+}
+
+#[inline]
+fn dist(x: usize, y: usize, cx: f32, cy: f32) -> f32 {
+    let dx = x as f32 - cx;
+    let dy = y as f32 - cy;
+    (dx * dx + dy * dy).sqrt()
+}
+
+#[inline]
+fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-2.0 * z).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = generate(100, 7);
+        let b = generate(100, 7);
+        let c = generate(100, 8);
+        assert_eq!(a.image(5), b.image(5));
+        assert_ne!(a.image(5), c.image(5));
+    }
+
+    #[test]
+    fn balanced_classes() {
+        let ds = generate(1000, 3);
+        let counts = ds.class_counts();
+        assert!(counts.iter().all(|&c| c == 100), "{counts:?}");
+    }
+
+    #[test]
+    fn standardized_images() {
+        let ds = generate(50, 5);
+        for i in 0..ds.len() {
+            let img = ds.image(i);
+            let mean = img.iter().sum::<f32>() / PIXELS as f32;
+            let var =
+                img.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / PIXELS as f32;
+            assert!(mean.abs() < 1e-3, "mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "var {var}");
+        }
+    }
+
+    #[test]
+    fn classes_are_statistically_distinct() {
+        // nearest-centroid accuracy on noiseless-ish means must beat chance
+        // by a wide margin — guards against degenerate archetypes.
+        let mut centroids = vec![[0.0f64; PIXELS]; CLASSES];
+        let per = 40;
+        let mut rng = Rng::new(11);
+        for c in 0..CLASSES {
+            for _ in 0..per {
+                let img = render(c, &mut rng);
+                for (acc, v) in centroids[c].iter_mut().zip(img.iter()) {
+                    *acc += *v as f64 / per as f64;
+                }
+            }
+        }
+        let mut correct = 0;
+        let total = CLASSES * 20;
+        for c in 0..CLASSES {
+            for _ in 0..20 {
+                let img = render(c, &mut rng);
+                let best = (0..CLASSES)
+                    .min_by(|&a, &b| {
+                        let da = l2(&centroids[a], &img);
+                        let db = l2(&centroids[b], &img);
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                if best == c {
+                    correct += 1;
+                }
+            }
+        }
+        let acc = correct as f64 / total as f64;
+        assert!(acc > 0.5, "nearest-centroid acc {acc} too low");
+    }
+
+    fn l2(c: &[f64; PIXELS], img: &[f32; PIXELS]) -> f64 {
+        c.iter()
+            .zip(img.iter())
+            .map(|(a, &b)| (a - b as f64) * (a - b as f64))
+            .sum()
+    }
+}

@@ -1,0 +1,355 @@
+//! Experiment drivers: one per paper table/figure (DESIGN.md §4),
+//! shared by the CLI (`splitfed experiment ...`) and the bench targets.
+//!
+//! The [`Harness`] owns the PJRT runtime, datasets, and the measured
+//! compute profile so a multi-run experiment (e.g. Table III = 8 runs)
+//! pays compilation and profiling once.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::algos;
+use crate::config::{Algo, Election, ExpConfig};
+use crate::data::{self, Dataset};
+use crate::metrics::{Headline, RunResult};
+use crate::netsim::ComputeProfile;
+use crate::runtime::{ModelOps, Runtime};
+use crate::util::json::{arr, Json};
+
+/// Scaled-down vs paper-scale execution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// CI-sized: few rounds, small local datasets (minutes).
+    Smoke,
+    /// Default: enough to see the paper's shapes clearly (tens of
+    /// minutes for the full table).
+    Small,
+    /// The paper's settings (6,666 images/node, 60/30 rounds) — hours.
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Result<Scale> {
+        match s {
+            "smoke" => Ok(Scale::Smoke),
+            "small" => Ok(Scale::Small),
+            "paper" => Ok(Scale::Paper),
+            other => anyhow::bail!("unknown scale `{other}` (smoke|small|paper)"),
+        }
+    }
+
+    /// Apply the scale to a paper-preset config.
+    pub fn apply(&self, cfg: &mut ExpConfig) {
+        match self {
+            Scale::Smoke => {
+                cfg.rounds = cfg.rounds.min(3);
+                cfg.samples_per_node = 64;
+                cfg.val_per_node = 32;
+                cfg.test_samples = 256;
+            }
+            Scale::Small => {
+                cfg.rounds = cfg.rounds.min(12);
+                cfg.samples_per_node = 128;
+                cfg.val_per_node = 64;
+                cfg.test_samples = 512;
+            }
+            Scale::Paper => {
+                cfg.samples_per_node = 6000;
+                cfg.val_per_node = 666;
+                cfg.test_samples = 10_000;
+            }
+        }
+    }
+}
+
+/// Shared state for a batch of runs.
+pub struct Harness {
+    runtime: Runtime,
+    profile: ComputeProfile,
+    pub out_dir: PathBuf,
+}
+
+impl Harness {
+    /// Load the runtime from `artifacts_dir`, profile compute once.
+    pub fn new(artifacts_dir: &Path, out_dir: &Path) -> Result<Harness> {
+        let runtime = Runtime::load(artifacts_dir)?;
+        let ops = ModelOps::new(&runtime);
+        let profile = ops.profile_compute(2)?;
+        crate::info!(
+            "compute profile: fwd={:.1}ms bwd={:.1}ms server={:.1}ms eval={:.1}ms",
+            profile.client_fwd_s * 1e3,
+            profile.client_bwd_s * 1e3,
+            profile.server_step_s * 1e3,
+            profile.eval_batch_s * 1e3
+        );
+        std::fs::create_dir_all(out_dir)?;
+        Ok(Harness {
+            runtime,
+            profile,
+            out_dir: out_dir.to_path_buf(),
+        })
+    }
+
+    pub fn ops(&self) -> ModelOps<'_> {
+        ModelOps::new(&self.runtime)
+    }
+
+    pub fn profile(&self) -> ComputeProfile {
+        self.profile
+    }
+
+    /// Build the three datasets for a config (corpus / val / test),
+    /// deterministic in the config seed.
+    pub fn datasets(&self, cfg: &ExpConfig) -> (Dataset, Dataset, Dataset) {
+        let per_node = cfg.samples_per_node + cfg.val_per_node;
+        let corpus_n = cfg.nodes * per_node + cfg.nodes; // slack for splits
+        let (corpus, mut holdout) = data::load_or_synthesize(
+            &cfg.data_dir,
+            corpus_n,
+            2 * cfg.test_samples,
+            cfg.seed,
+        );
+        let val = holdout.subset(&(0..cfg.test_samples.min(holdout.len() / 2)).collect::<Vec<_>>());
+        holdout.truncate(2 * cfg.test_samples.min(holdout.len()));
+        let test = holdout.subset(
+            &(cfg.test_samples.min(holdout.len() / 2)..holdout.len()).collect::<Vec<_>>(),
+        );
+        (corpus, val, test)
+    }
+
+    /// Execute one configured run end-to-end.
+    pub fn run(&self, cfg: &ExpConfig) -> Result<RunResult> {
+        cfg.validate()?;
+        let (corpus, val, test) = self.datasets(cfg);
+        let ops = self.ops();
+        let mut ctx = algos::common::TrainCtx::with_profile(cfg, &ops, self.profile);
+        let result = match cfg.algo {
+            Algo::Sl => algos::sl::run_with_ctx(&mut ctx, &corpus, &val, &test)?,
+            Algo::Sfl => algos::sfl::run_with_ctx(&mut ctx, &corpus, &val, &test)?,
+            Algo::Ssfl => algos::ssfl::run_with_ctx(&mut ctx, &corpus, &val, &test)?,
+            Algo::Bsfl => {
+                algos::bsfl::run_with_ctx(&mut ctx, &corpus, &val, &test)?.0
+            }
+        };
+        crate::info!(
+            "{}: test_loss={:.4} test_acc={:.3} avg_round={:.1}s (wall {:.1}s)",
+            result.label,
+            result.test_loss,
+            result.test_acc,
+            result.avg_round_s(),
+            result.wall_s
+        );
+        Ok(result)
+    }
+
+    /// Run + persist (JSON + CSV under `out_dir`).
+    pub fn run_and_save(&self, cfg: &ExpConfig, name: &str) -> Result<RunResult> {
+        let r = self.run(cfg)?;
+        std::fs::write(
+            self.out_dir.join(format!("{name}.json")),
+            r.to_json().to_string(),
+        )?;
+        r.write_csv(&self.out_dir.join(format!("{name}.csv")))?;
+        Ok(r)
+    }
+}
+
+/// Configs for one convergence figure: all four algorithms at `nodes`,
+/// benign or attacked.
+fn figure_configs(nodes: usize, scale: Scale, attacked: bool, seed: u64) -> Vec<ExpConfig> {
+    Algo::all()
+        .into_iter()
+        .map(|algo| {
+            let mut cfg = if nodes <= 9 {
+                ExpConfig::paper_9(algo)
+            } else {
+                ExpConfig::paper_36(algo)
+            };
+            scale.apply(&mut cfg);
+            cfg.seed = seed;
+            if attacked {
+                cfg.attack_fraction = ExpConfig::paper_attack_fraction(nodes);
+                cfg.voting_attack = true;
+            }
+            cfg
+        })
+        .collect()
+}
+
+/// FIG2 / FIG3: validation-loss curves for all four algorithms, normal
+/// and attacked, at the given node count.
+pub fn fig_convergence(h: &Harness, nodes: usize, scale: Scale, seed: u64) -> Result<Vec<RunResult>> {
+    let fig = if nodes <= 9 { "fig2" } else { "fig3" };
+    let mut results = Vec::new();
+    for attacked in [false, true] {
+        for cfg in figure_configs(nodes, scale, attacked, seed) {
+            let tag = if attacked { "attacked" } else { "normal" };
+            let name = format!("{fig}_{}_{}", cfg.algo.name(), tag);
+            let mut r = h.run_and_save(&cfg, &name)?;
+            r.label = name;
+            results.push(r);
+        }
+    }
+    print_convergence_table(fig, &results);
+    Ok(results)
+}
+
+/// FIG4: round completion times at 36 nodes, per algorithm.
+pub fn fig4_roundtime(h: &Harness, scale: Scale, seed: u64) -> Result<Vec<RunResult>> {
+    let mut results = Vec::new();
+    for cfg in figure_configs(36, scale, false, seed) {
+        let name = format!("fig4_{}", cfg.algo.name());
+        let mut r = h.run_and_save(&cfg, &name)?;
+        r.label = name;
+        results.push(r);
+    }
+    println!("\nFIG4 — round completion time (36 nodes, virtual seconds)");
+    println!("{:<8} {:>12} {:>14}", "algo", "avg_round_s", "total_bytes");
+    for r in &results {
+        println!(
+            "{:<8} {:>12.1} {:>14}",
+            r.algo,
+            r.avg_round_s(),
+            r.traffic.total_bytes()
+        );
+    }
+    Ok(results)
+}
+
+/// TABLE III + headline ratios: normal & attacked test loss and round
+/// time for all four algorithms (36 nodes).
+pub fn table3(h: &Harness, scale: Scale, seed: u64) -> Result<(Vec<RunResult>, Headline)> {
+    let mut normal = Vec::new();
+    let mut attacked = Vec::new();
+    for atk in [false, true] {
+        for cfg in figure_configs(36, scale, atk, seed) {
+            let tag = if atk { "attacked" } else { "normal" };
+            let name = format!("table3_{}_{}", cfg.algo.name(), tag);
+            let r = h.run_and_save(&cfg, &name)?;
+            if atk {
+                attacked.push(r);
+            } else {
+                normal.push(r);
+            }
+        }
+    }
+
+    println!("\nTABLE III — 36 nodes ({scale:?} scale)");
+    println!(
+        "{:<8} {:>18} {:>20} {:>18}",
+        "algo", "normal test loss", "attacked test loss", "avg round (s)"
+    );
+    for (n, a) in normal.iter().zip(attacked.iter()) {
+        println!(
+            "{:<8} {:>18.3} {:>20.3} {:>18.1}",
+            n.algo,
+            n.test_loss,
+            a.test_loss,
+            n.avg_round_s()
+        );
+    }
+
+    let headline = Headline::compute(
+        &[&normal[0], &normal[1], &normal[2], &normal[3]],
+        &[&attacked[0], &attacked[1], &attacked[2], &attacked[3]],
+    );
+    println!("\nHeadline ratios (paper claims in parentheses):");
+    println!(
+        "  SSFL perf gain vs SFL:        {:>6.1}%  (31.2%)",
+        100.0 * headline.ssfl_perf_gain
+    );
+    println!(
+        "  SSFL round-time cut vs SFL:   {:>6.1}%  (85.2%)",
+        100.0 * headline.ssfl_scalability_gain
+    );
+    println!(
+        "  BSFL attack resilience gain:  {:>6.1}%  (62.7%)",
+        100.0 * headline.bsfl_resilience_gain
+    );
+    println!(
+        "  BSFL round-time cut vs SL:    {:>6.1}%  (11%)",
+        100.0 * headline.bsfl_vs_sl_time
+    );
+    println!(
+        "  BSFL round-time cut vs SFL:   {:>6.1}%  (10%)",
+        100.0 * headline.bsfl_vs_sfl_time
+    );
+
+    let mut all = normal;
+    all.extend(attacked);
+    let doc = arr(all.iter().map(|r| r.to_json()));
+    std::fs::write(h.out_dir.join("table3.json"), doc.to_string())?;
+    Ok((all, headline))
+}
+
+/// ABL1 (§VI.D): score-based vs random committee election, attacked BSFL.
+pub fn ablation_committee(h: &Harness, scale: Scale, seed: u64) -> Result<Vec<RunResult>> {
+    let mut results = Vec::new();
+    for (label, election) in [("score", Election::ScoreBased), ("random", Election::Random)] {
+        let mut cfg = ExpConfig::paper_9(Algo::Bsfl);
+        scale.apply(&mut cfg);
+        cfg.seed = seed;
+        cfg.election = election;
+        cfg.attack_fraction = 0.33;
+        cfg.voting_attack = true;
+        let name = format!("ablation_election_{label}");
+        let mut r = h.run_and_save(&cfg, &name)?;
+        r.label = name;
+        results.push(r);
+    }
+    println!("\nABL1 — committee election policy (attacked BSFL, 9 nodes)");
+    for r in &results {
+        println!(
+            "  {:<28} test_loss={:.3} best_val={:.3}",
+            r.label,
+            r.test_loss,
+            r.best_val_loss()
+        );
+    }
+    Ok(results)
+}
+
+/// ABL2 (§V.E): K sensitivity under attack (36 nodes, K = 1..shards).
+pub fn ablation_topk(h: &Harness, scale: Scale, seed: u64) -> Result<Vec<RunResult>> {
+    let mut results = Vec::new();
+    for k in 1..=6usize {
+        let mut cfg = ExpConfig::paper_36(Algo::Bsfl);
+        scale.apply(&mut cfg);
+        cfg.seed = seed;
+        cfg.k = k;
+        cfg.attack_fraction = 0.47;
+        cfg.voting_attack = true;
+        let name = format!("ablation_topk_k{k}");
+        let mut r = h.run_and_save(&cfg, &name)?;
+        r.label = name;
+        results.push(r);
+    }
+    println!("\nABL2 — top-K sensitivity (attacked BSFL, 36 nodes)");
+    println!("{:<4} {:>12} {:>10}", "K", "test_loss", "test_acc");
+    for (k, r) in (1..=6).zip(results.iter()) {
+        println!("{:<4} {:>12.3} {:>10.3}", k, r.test_loss, r.test_acc);
+    }
+    Ok(results)
+}
+
+fn print_convergence_table(fig: &str, results: &[RunResult]) {
+    println!("\n{} — final validation losses", fig.to_uppercase());
+    println!("{:<26} {:>10} {:>10} {:>12}", "run", "final", "best", "avg_round_s");
+    for r in results {
+        println!(
+            "{:<26} {:>10.3} {:>10.3} {:>12.1}",
+            r.label,
+            r.final_val_loss(),
+            r.best_val_loss(),
+            r.avg_round_s()
+        );
+    }
+}
+
+/// Persist a combined results document.
+pub fn save_all(h: &Harness, name: &str, results: &[RunResult]) -> Result<()> {
+    let doc: Json = arr(results.iter().map(|r| r.to_json()));
+    std::fs::write(h.out_dir.join(format!("{name}.json")), doc.to_string())?;
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! # splitfed — Sharded & Blockchain-enabled SplitFed Learning
+//!
+//! A full reproduction of "Enhancing Split Learning with Sharded and
+//! Blockchain-Enabled SplitFed Approaches" (Sokhankhosh et al., 2025) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! The crate is the Layer-3 coordinator: it owns the training topology
+//! (clients, shard servers, FL server / blockchain), the four training
+//! algorithms (SL, SFL, SSFL, BSFL), the committee-consensus blockchain
+//! substrate, the attack harness, the virtual-time network simulator, and
+//! the experiment/bench framework.  All model math executes through
+//! AOT-compiled HLO artifacts (built once by `python/compile/aot.py`) via
+//! the PJRT CPU client — Python never runs on the training path.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`util`] — hand-rolled substrates: PRNG, JSON, CLI args, thread pool,
+//!   logging, mini property-testing.
+//! * [`tensor`] — flat f32 tensors and named weight bundles (FedAvg etc.).
+//! * [`data`] — synthetic Fashion-MNIST generator, IDX loader, non-IID
+//!   partitioners, batching.
+//! * [`runtime`] — PJRT client wrapper + manifest-driven executable cache.
+//! * [`netsim`] — virtual-time network/cost model for round times.
+//! * [`blockchain`] — hash-chained ledger, smart contracts, committee
+//!   consensus.
+//! * [`aggregation`] — FedAvg and top-K aggregation.
+//! * [`attack`] — data poisoning and committee voting attacks.
+//! * [`nodes`] — client / shard-server state machines.
+//! * [`algos`] — the four orchestrators (SL, SFL, SSFL, BSFL).
+//! * [`metrics`] — loss curves, timing, experiment output.
+//! * [`config`] — experiment configuration + paper presets.
+//! * [`exp`] — table/figure experiment drivers shared by CLI and benches.
+
+pub mod aggregation;
+pub mod algos;
+pub mod attack;
+pub mod blockchain;
+pub mod config;
+pub mod data;
+pub mod exp;
+pub mod metrics;
+pub mod netsim;
+pub mod nodes;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

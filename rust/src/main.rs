@@ -1,0 +1,190 @@
+//! `splitfed` — the leader binary.
+//!
+//! ```text
+//! splitfed train      --algo bsfl --preset paper36 [--rounds N] [--attack-fraction F] ...
+//! splitfed experiment fig2|fig3|fig4|table3|ablation-committee|ablation-topk
+//!                     [--scale smoke|small|paper] [--out results/]
+//! splitfed profile    # measured per-entry compute costs
+//! splitfed inspect    # manifest + artifact summary
+//! ```
+//!
+//! Requires `make artifacts` to have produced `artifacts/` (HLO text +
+//! manifest) — Python runs only at build time, never here.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use splitfed::config::ExpConfig;
+use splitfed::exp::{self, Harness, Scale};
+use splitfed::runtime::{ModelOps, Runtime};
+use splitfed::util::args::Args;
+use splitfed::util::log;
+
+const USAGE: &str = "\
+splitfed — Sharded & Blockchain-enabled SplitFed Learning
+
+USAGE:
+  splitfed train      [--algo sl|sfl|ssfl|bsfl] [--preset paper9|paper36]
+                      [--rounds N] [--samples-per-node N] [--lr F]
+                      [--attack-fraction F] [--voting-attack]
+                      [--election score|random] [--seed N]
+                      [--artifacts DIR] [--out DIR]
+  splitfed experiment fig2|fig3|fig4|table3|ablation-committee|ablation-topk
+                      [--scale smoke|small|paper] [--seed N]
+                      [--artifacts DIR] [--out DIR]
+  splitfed profile    [--artifacts DIR]
+  splitfed inspect    [--artifacts DIR]
+
+Run `make artifacts` first to build the AOT artifacts.";
+
+fn main() -> ExitCode {
+    log::init_from_env();
+    match real_main() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let args = Args::from_env(&["voting-attack", "help"])
+        .map_err(|e| anyhow::anyhow!("{e}\n\n{USAGE}"))?;
+    if args.flag("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let out = PathBuf::from(args.get_or("out", "results"));
+
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args, &artifacts, &out),
+        Some("experiment") => cmd_experiment(&args, &artifacts, &out),
+        Some("profile") => cmd_profile(&artifacts),
+        Some("inspect") => cmd_inspect(&artifacts),
+        other => {
+            anyhow::bail!("unknown subcommand {other:?}\n\n{USAGE}");
+        }
+    }
+}
+
+fn cmd_train(args: &Args, artifacts: &Path, out: &Path) -> anyhow::Result<()> {
+    let mut cfg = ExpConfig {
+        artifacts_dir: artifacts.to_path_buf(),
+        ..ExpConfig::default()
+    };
+    cfg.apply_args(args).map_err(|e| anyhow::anyhow!("{e}\n\n{USAGE}"))?;
+
+    let h = Harness::new(artifacts, out)?;
+    let name = format!(
+        "train_{}_n{}_seed{}",
+        cfg.algo.name(),
+        cfg.nodes,
+        cfg.seed
+    );
+    let r = h.run_and_save(&cfg, &name)?;
+
+    println!("\nrun: {name}");
+    println!("  rounds:        {}", r.records.len());
+    println!("  test loss:     {:.4}", r.test_loss);
+    println!("  test accuracy: {:.3}", r.test_acc);
+    println!("  avg round:     {:.1}s (virtual)", r.avg_round_s());
+    println!("  wall clock:    {:.1}s", r.wall_s);
+    println!("  results:       {}/{name}.json", out.display());
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args, artifacts: &Path, out: &Path) -> anyhow::Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("experiment name required\n\n{USAGE}"))?;
+    let scale = Scale::parse(args.get_or("scale", "small"))?;
+    let seed = args.get_u64("seed", 42).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let h = Harness::new(artifacts, out)?;
+    match which {
+        "fig2" => {
+            let r = exp::fig_convergence(&h, 9, scale, seed)?;
+            exp::save_all(&h, "fig2", &r)?;
+        }
+        "fig3" => {
+            let r = exp::fig_convergence(&h, 36, scale, seed)?;
+            exp::save_all(&h, "fig3", &r)?;
+        }
+        "fig4" => {
+            let r = exp::fig4_roundtime(&h, scale, seed)?;
+            exp::save_all(&h, "fig4", &r)?;
+        }
+        "table3" => {
+            exp::table3(&h, scale, seed)?;
+        }
+        "ablation-committee" => {
+            let r = exp::ablation_committee(&h, scale, seed)?;
+            exp::save_all(&h, "ablation_committee", &r)?;
+        }
+        "ablation-topk" => {
+            let r = exp::ablation_topk(&h, scale, seed)?;
+            exp::save_all(&h, "ablation_topk", &r)?;
+        }
+        other => anyhow::bail!("unknown experiment `{other}`\n\n{USAGE}"),
+    }
+    Ok(())
+}
+
+fn cmd_profile(artifacts: &Path) -> anyhow::Result<()> {
+    let rt = Runtime::load(artifacts)?;
+    let ops = ModelOps::new(&rt);
+    let prof = ops.profile_compute(3)?;
+    println!("measured compute profile (CPU PJRT, per invocation):");
+    println!("  client_forward:    {:>8.2} ms", prof.client_fwd_s * 1e3);
+    println!("  client_backward:   {:>8.2} ms", prof.client_bwd_s * 1e3);
+    println!("  server_train_step: {:>8.2} ms", prof.server_step_s * 1e3);
+    println!("  evaluate (batch):  {:>8.2} ms", prof.eval_batch_s * 1e3);
+    println!("\nmessage sizes (from manifest):");
+    println!("  activation (A+y+w): {:>10} bytes", ops.act_bytes());
+    println!("  gradient (dA):      {:>10} bytes", ops.grad_bytes());
+    let (c, s) = ops.init_models()?;
+    println!(
+        "  client model:       {:>10} bytes ({} params)",
+        c.wire_bytes(),
+        c.param_count()
+    );
+    println!(
+        "  server model:       {:>10} bytes ({} params)",
+        s.wire_bytes(),
+        s.param_count()
+    );
+    Ok(())
+}
+
+fn cmd_inspect(artifacts: &Path) -> anyhow::Result<()> {
+    let m = splitfed::runtime::Manifest::load(artifacts)?;
+    println!("artifacts: {}", artifacts.display());
+    println!(
+        "train_batch={} eval_batch={} seed={}",
+        m.train_batch, m.eval_batch, m.seed
+    );
+    println!("\nentries:");
+    for (name, e) in &m.entries {
+        let in_elems: usize = e.inputs.iter().map(|s| s.elements()).sum();
+        let out_elems: usize = e.outputs.iter().map(|s| s.elements()).sum();
+        println!(
+            "  {:<18} {} -> {} tensors ({} -> {} elements), {}",
+            name,
+            e.inputs.len(),
+            e.outputs.len(),
+            in_elems,
+            out_elems,
+            e.file
+        );
+    }
+    println!("\ninit weights:");
+    for (key, (file, shape)) in &m.init {
+        println!("  {:<14} {:?} <- {}", key, shape, file);
+    }
+    Ok(())
+}

@@ -1,0 +1,242 @@
+//! Experiment metrics: per-round records, run results, CSV/JSON output,
+//! and the paper's headline summary ratios.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::netsim::{MsgKind, Traffic};
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// One training round's measurements.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Global-model loss on the held-out validation set.
+    pub val_loss: f64,
+    pub val_acc: f64,
+    /// Virtual (netsim) duration of this round, seconds.
+    pub round_s: f64,
+    /// Cumulative virtual time at the end of this round.
+    pub cum_s: f64,
+    /// Mean training loss observed during the round.
+    pub train_loss: f64,
+}
+
+/// A finished experiment run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub algo: String,
+    pub label: String,
+    pub records: Vec<RoundRecord>,
+    /// Final global-model test loss (the paper's Table III metric).
+    pub test_loss: f64,
+    pub test_acc: f64,
+    pub stopped_early: bool,
+    pub traffic: Traffic,
+    /// Wall-clock seconds actually spent (compute, not virtual).
+    pub wall_s: f64,
+}
+
+impl RunResult {
+    /// Mean virtual round time, seconds (Table III column 3).
+    pub fn avg_round_s(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.round_s).sum::<f64>() / self.records.len() as f64
+    }
+
+    /// Best (minimum) validation loss across rounds.
+    pub fn best_val_loss(&self) -> f64 {
+        self.records
+            .iter()
+            .map(|r| r.val_loss)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn final_val_loss(&self) -> f64 {
+        self.records.last().map(|r| r.val_loss).unwrap_or(f64::NAN)
+    }
+
+    /// JSON document for one run (plots & EXPERIMENTS.md are generated
+    /// from these).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("algo", s(&self.algo)),
+            ("label", s(&self.label)),
+            ("test_loss", num(self.test_loss)),
+            ("test_acc", num(self.test_acc)),
+            ("avg_round_s", num(self.avg_round_s())),
+            ("stopped_early", Json::Bool(self.stopped_early)),
+            ("wall_s", num(self.wall_s)),
+            (
+                "traffic_bytes",
+                obj(vec![
+                    ("activation", num(self.traffic.bytes(MsgKind::Activation) as f64)),
+                    ("gradient", num(self.traffic.bytes(MsgKind::Gradient) as f64)),
+                    ("model_update", num(self.traffic.bytes(MsgKind::ModelUpdate) as f64)),
+                    ("chain_tx", num(self.traffic.bytes(MsgKind::ChainTx) as f64)),
+                    ("block", num(self.traffic.bytes(MsgKind::Block) as f64)),
+                ]),
+            ),
+            (
+                "rounds",
+                arr(self.records.iter().map(|r| {
+                    obj(vec![
+                        ("round", num(r.round as f64)),
+                        ("val_loss", num(r.val_loss)),
+                        ("val_acc", num(r.val_acc)),
+                        ("train_loss", num(r.train_loss)),
+                        ("round_s", num(r.round_s)),
+                        ("cum_s", num(r.cum_s)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Write the per-round curve as CSV (one file per run).
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "round,val_loss,val_acc,train_loss,round_s,cum_s")?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{},{:.6},{:.6},{:.6},{:.3},{:.3}",
+                r.round, r.val_loss, r.val_acc, r.train_loss, r.round_s, r.cum_s
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// The abstract's headline ratios, computed from a set of finished runs
+/// (printed by the Table III bench).
+#[derive(Clone, Copy, Debug)]
+pub struct Headline {
+    /// SSFL test-loss improvement over SFL: 1 - loss(SSFL)/loss(SFL)
+    /// (paper: 31.2%).
+    pub ssfl_perf_gain: f64,
+    /// SSFL round-time reduction vs SFL: 1 - t(SSFL)/t(SFL)
+    /// (paper: 85.2%).
+    pub ssfl_scalability_gain: f64,
+    /// BSFL attacked-loss reduction vs the best non-BSFL attacked loss:
+    /// 1 - loss(BSFL,atk)/loss(best-other,atk) (paper: 62.7%).
+    pub bsfl_resilience_gain: f64,
+    /// BSFL round-time reduction vs SL (paper: 11%).
+    pub bsfl_vs_sl_time: f64,
+    /// BSFL round-time reduction vs SFL (paper: 10%).
+    pub bsfl_vs_sfl_time: f64,
+}
+
+impl Headline {
+    /// `normal[i]`/`attacked[i]` are runs of the same algorithm under
+    /// benign / attacked settings, in the order [sl, sfl, ssfl, bsfl].
+    pub fn compute(normal: &[&RunResult; 4], attacked: &[&RunResult; 4]) -> Headline {
+        let [_, n_sfl, n_ssfl, _] = normal;
+        let [a_sl, a_sfl, a_ssfl, a_bsfl] = attacked;
+        let best_other_attacked = a_sl
+            .test_loss
+            .min(a_sfl.test_loss)
+            .min(a_ssfl.test_loss);
+        Headline {
+            ssfl_perf_gain: 1.0 - n_ssfl.test_loss / n_sfl.test_loss,
+            ssfl_scalability_gain: 1.0 - n_ssfl.avg_round_s() / n_sfl.avg_round_s(),
+            bsfl_resilience_gain: 1.0 - a_bsfl.test_loss / best_other_attacked,
+            bsfl_vs_sl_time: 1.0 - a_bsfl.avg_round_s() / normal[0].avg_round_s(),
+            bsfl_vs_sfl_time: 1.0 - a_bsfl.avg_round_s() / n_sfl.avg_round_s(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(algo: &str, test_loss: f64, round_s: f64) -> RunResult {
+        RunResult {
+            algo: algo.into(),
+            label: algo.into(),
+            records: vec![
+                RoundRecord {
+                    round: 0,
+                    val_loss: 1.0,
+                    val_acc: 0.5,
+                    round_s,
+                    cum_s: round_s,
+                    train_loss: 1.2,
+                },
+                RoundRecord {
+                    round: 1,
+                    val_loss: 0.8,
+                    val_acc: 0.6,
+                    round_s,
+                    cum_s: 2.0 * round_s,
+                    train_loss: 0.9,
+                },
+            ],
+            test_loss,
+            test_acc: 0.7,
+            stopped_early: false,
+            traffic: Traffic::new(),
+            wall_s: 1.0,
+        }
+    }
+
+    #[test]
+    fn avg_and_best() {
+        let r = run("ssfl", 0.3, 5.0);
+        assert!((r.avg_round_s() - 5.0).abs() < 1e-12);
+        assert!((r.best_val_loss() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn headline_math_matches_paper_shape() {
+        // feed the paper's own Table III numbers; ratios should come out
+        // at the abstract's claims.
+        let n = [
+            &run("sl", 0.456, 37.6),
+            &run("sfl", 0.430, 37.2),
+            &run("ssfl", 0.296, 5.5),
+            &run("bsfl", 0.339, 33.7),
+        ];
+        let a = [
+            &run("sl", 0.981, 37.6),
+            &run("sfl", 0.872, 37.2),
+            &run("ssfl", 1.010, 5.5),
+            &run("bsfl", 0.325, 33.7),
+        ];
+        let h = Headline::compute(&n, &a);
+        assert!((h.ssfl_perf_gain - 0.312).abs() < 0.01, "{}", h.ssfl_perf_gain);
+        assert!(
+            (h.ssfl_scalability_gain - 0.852).abs() < 0.01,
+            "{}",
+            h.ssfl_scalability_gain
+        );
+        assert!(
+            (h.bsfl_resilience_gain - 0.627).abs() < 0.01,
+            "{}",
+            h.bsfl_resilience_gain
+        );
+        assert!((h.bsfl_vs_sl_time - 0.104).abs() < 0.01);
+        assert!((h.bsfl_vs_sfl_time - 0.094).abs() < 0.01);
+    }
+
+    #[test]
+    fn json_and_csv_emission() {
+        let r = run("bsfl", 0.3, 2.0);
+        let j = r.to_json();
+        assert_eq!(j.get("algo").unwrap().as_str().unwrap(), "bsfl");
+        assert_eq!(j.get("rounds").unwrap().as_arr().unwrap().len(), 2);
+        let p = std::env::temp_dir().join("splitfed_metrics_test.csv");
+        r.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("round,val_loss"));
+        assert_eq!(text.lines().count(), 3);
+    }
+}

@@ -1,0 +1,333 @@
+//! Virtual-time network & resource simulator.
+//!
+//! The paper's round-completion-time results (Fig 4, Table III) were
+//! measured on a physical testbed (multi-process nodes + LAN + Hyperledger
+//! Fabric).  Here timing is reproduced in *virtual time* (DESIGN.md §1):
+//!
+//! * every message (smashed activations, feedback gradients, model
+//!   updates, blockchain transactions/blocks) is charged
+//!   `latency + bytes / bandwidth` on a configurable [`LinkModel`];
+//! * compute is charged with *measured* per-batch PJRT durations
+//!   ([`ComputeProfile`], filled in by the runtime at startup);
+//! * the shard server is a serial resource: concurrent client requests
+//!   queue, which [`ShardSim`] resolves with an event-driven simulation —
+//!   this queueing is precisely why single-server SFL rounds stall at high
+//!   client counts and why sharding gives the paper's 85% speedup;
+//! * parallel branches (shards) combine with `max`, sequential protocol
+//!   legs (SL's client relay) with `+`.
+//!
+//! [`Traffic`] tallies bytes/messages by category for the communication-
+//! overhead figures.
+
+use std::collections::BTreeMap;
+
+/// Point-to-point link: fixed latency plus bandwidth-limited transfer.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    /// One-way message latency, seconds.
+    pub latency_s: f64,
+    /// Usable bandwidth, bytes/second.
+    pub bandwidth_bps: f64,
+}
+
+impl LinkModel {
+    /// 1 Gbps LAN with 0.2 ms latency (the paper's single-host multi-
+    /// process testbed is closer to loopback; this is deliberately a
+    /// realistic deployment link, making communication costs visible the
+    /// way the paper's Figure 4 intends).
+    pub fn lan() -> LinkModel {
+        LinkModel {
+            latency_s: 2e-4,
+            bandwidth_bps: 125e6,
+        }
+    }
+
+    /// Wide-area link for the blockchain committee (consensus messages
+    /// cross organization boundaries): 50 Mbps, 20 ms.
+    pub fn wan() -> LinkModel {
+        LinkModel {
+            latency_s: 2e-2,
+            bandwidth_bps: 6.25e6,
+        }
+    }
+
+    /// Seconds to deliver `bytes`.
+    pub fn transfer_s(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+}
+
+/// Measured per-invocation compute costs (seconds), filled from real PJRT
+/// executions by `runtime::profile_compute`.
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeProfile {
+    /// client_forward on one train batch.
+    pub client_fwd_s: f64,
+    /// client_backward on one train batch.
+    pub client_bwd_s: f64,
+    /// server_train_step on one train batch.
+    pub server_step_s: f64,
+    /// evaluate on one eval batch.
+    pub eval_batch_s: f64,
+}
+
+impl ComputeProfile {
+    /// Placeholder profile for tests that never touch PJRT.
+    pub fn synthetic_default() -> ComputeProfile {
+        ComputeProfile {
+            client_fwd_s: 2e-3,
+            client_bwd_s: 3e-3,
+            server_step_s: 8e-3,
+            eval_batch_s: 10e-3,
+        }
+    }
+}
+
+/// Message categories tallied by [`Traffic`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum MsgKind {
+    /// Client -> server smashed activations + labels.
+    Activation,
+    /// Server -> client feedback gradient dA.
+    Gradient,
+    /// Model update shipped for aggregation (client or server weights).
+    ModelUpdate,
+    /// Blockchain transaction payload (digests, scores).
+    ChainTx,
+    /// Block propagation among committee members.
+    Block,
+}
+
+/// Byte/message accounting per category.
+#[derive(Clone, Debug, Default)]
+pub struct Traffic {
+    counts: BTreeMap<MsgKind, (u64, u64)>, // kind -> (messages, bytes)
+}
+
+impl Traffic {
+    pub fn new() -> Traffic {
+        Traffic::default()
+    }
+
+    pub fn record(&mut self, kind: MsgKind, bytes: usize) {
+        let e = self.counts.entry(kind).or_insert((0, 0));
+        e.0 += 1;
+        e.1 += bytes as u64;
+    }
+
+    pub fn messages(&self, kind: MsgKind) -> u64 {
+        self.counts.get(&kind).map(|e| e.0).unwrap_or(0)
+    }
+
+    pub fn bytes(&self, kind: MsgKind) -> u64 {
+        self.counts.get(&kind).map(|e| e.1).unwrap_or(0)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.counts.values().map(|e| e.1).sum()
+    }
+
+    pub fn merge(&mut self, other: &Traffic) {
+        for (k, (m, b)) in &other.counts {
+            let e = self.counts.entry(*k).or_insert((0, 0));
+            e.0 += m;
+            e.1 += b;
+        }
+    }
+}
+
+/// Event-driven simulation of one shard-server training round.
+///
+/// `J` clients pipeline batches through a serial server resource:
+/// a client's batch `b+1` cannot start before its `dA` for batch `b`
+/// arrives (the split-learning data dependency), and the server handles
+/// one `server_train_step` at a time (the paper's single-SL-server
+/// bottleneck).
+#[derive(Clone, Debug)]
+pub struct ShardSim {
+    pub link: LinkModel,
+    pub prof: ComputeProfile,
+    /// Bytes of one activation message (A + labels) per batch.
+    pub act_bytes: usize,
+    /// Bytes of one feedback-gradient message per batch.
+    pub grad_bytes: usize,
+}
+
+/// Result of a simulated shard round.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardRound {
+    /// Wall-clock (virtual) seconds for the slowest client to finish.
+    pub round_s: f64,
+    /// Total seconds the server spent busy.
+    pub server_busy_s: f64,
+    /// Mean seconds a batch waited in the server queue.
+    pub mean_queue_wait_s: f64,
+}
+
+impl ShardSim {
+    /// Simulate `batches_per_client` batches for each of `clients`
+    /// clients (parallel clients, serial server).
+    pub fn round(&self, clients: usize, batches_per_client: usize) -> ShardRound {
+        if clients == 0 || batches_per_client == 0 {
+            return ShardRound::default();
+        }
+        let up = self.link.transfer_s(self.act_bytes);
+        let down = self.link.transfer_s(self.grad_bytes);
+
+        // ready[j] = virtual time client j can *send* its next activation
+        let mut ready = vec![0.0f64; clients];
+        let mut remaining = vec![batches_per_client; clients];
+        let mut server_free = 0.0f64;
+        let mut server_busy = 0.0f64;
+        let mut queue_wait = 0.0f64;
+        let mut total_batches = 0usize;
+        let mut done = vec![0.0f64; clients];
+
+        // Process events in time order: always advance the client whose
+        // next request would arrive earliest.
+        loop {
+            let mut next: Option<(usize, f64)> = None;
+            for j in 0..clients {
+                if remaining[j] > 0 {
+                    let arrive = ready[j] + self.prof.client_fwd_s + up;
+                    if next.map(|(_, t)| arrive < t).unwrap_or(true) {
+                        next = Some((j, arrive));
+                    }
+                }
+            }
+            let (j, arrive) = match next {
+                Some(x) => x,
+                None => break,
+            };
+            let start = arrive.max(server_free);
+            queue_wait += start - arrive;
+            let finish = start + self.prof.server_step_s;
+            server_free = finish;
+            server_busy += self.prof.server_step_s;
+            total_batches += 1;
+            // dA travels back; client backprops; then it may send again.
+            let client_done = finish + down + self.prof.client_bwd_s;
+            ready[j] = client_done;
+            remaining[j] -= 1;
+            done[j] = client_done;
+        }
+
+        let round_s = done.iter().cloned().fold(0.0, f64::max);
+        ShardRound {
+            round_s,
+            server_busy_s: server_busy,
+            mean_queue_wait_s: queue_wait / total_batches.max(1) as f64,
+        }
+    }
+
+    /// SL's strictly sequential variant: clients take turns; client j+1
+    /// cannot start until client j finished all its batches and the
+    /// client model has been relayed to it.
+    pub fn round_sequential(
+        &self,
+        clients: usize,
+        batches_per_client: usize,
+        relay_bytes: usize,
+    ) -> ShardRound {
+        if clients == 0 || batches_per_client == 0 {
+            return ShardRound::default();
+        }
+        let up = self.link.transfer_s(self.act_bytes);
+        let down = self.link.transfer_s(self.grad_bytes);
+        let per_batch =
+            self.prof.client_fwd_s + up + self.prof.server_step_s + down + self.prof.client_bwd_s;
+        let relay = self.link.transfer_s(relay_bytes);
+        let round_s = clients as f64 * batches_per_client as f64 * per_batch
+            + (clients.saturating_sub(1)) as f64 * relay;
+        ShardRound {
+            round_s,
+            server_busy_s: clients as f64
+                * batches_per_client as f64
+                * self.prof.server_step_s,
+            mean_queue_wait_s: 0.0,
+        }
+    }
+}
+
+/// Combine parallel branch durations (shards running concurrently).
+pub fn parallel(durations: &[f64]) -> f64 {
+    durations.iter().cloned().fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> ShardSim {
+        ShardSim {
+            link: LinkModel::lan(),
+            prof: ComputeProfile::synthetic_default(),
+            act_bytes: 800_000,
+            grad_bytes: 800_000,
+        }
+    }
+
+    #[test]
+    fn transfer_time_scales_with_bytes() {
+        let l = LinkModel::lan();
+        assert!(l.transfer_s(2_000_000) > l.transfer_s(1_000_000));
+        assert!((l.transfer_s(0) - l.latency_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_client_round_is_pipeline_sum() {
+        let s = sim();
+        let r = s.round(1, 10);
+        let up = s.link.transfer_s(s.act_bytes);
+        let down = s.link.transfer_s(s.grad_bytes);
+        let want = 10.0
+            * (s.prof.client_fwd_s + up + s.prof.server_step_s + down + s.prof.client_bwd_s);
+        assert!((r.round_s - want).abs() < 1e-9, "{} vs {}", r.round_s, want);
+        assert!(r.mean_queue_wait_s < 1e-12);
+    }
+
+    #[test]
+    fn server_serialization_creates_queueing() {
+        let s = sim();
+        let r1 = s.round(1, 10);
+        let r8 = s.round(8, 10);
+        // 8 clients with a serial server must be slower than 1 client,
+        // but much faster than 8x (clients overlap each other's comms).
+        assert!(r8.round_s > r1.round_s * 1.5);
+        assert!(r8.round_s < r1.round_s * 8.0);
+        assert!(r8.mean_queue_wait_s > 0.0);
+    }
+
+    #[test]
+    fn sequential_is_slower_than_parallel() {
+        let s = sim();
+        let par = s.round(8, 10);
+        let seq = s.round_sequential(8, 10, 1_300);
+        assert!(seq.round_s > par.round_s);
+    }
+
+    #[test]
+    fn sharding_speedup_shape() {
+        // The paper's headline: 36 nodes, 1 server (35 clients) vs
+        // 6 shards x 5 clients -> near-#shards speedup.
+        let s = sim();
+        let single = s.round(35, 10).round_s;
+        let sharded = parallel(&vec![s.round(5, 10).round_s; 6]);
+        let speedup = single / sharded;
+        assert!(speedup > 3.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let mut t = Traffic::new();
+        t.record(MsgKind::Activation, 100);
+        t.record(MsgKind::Activation, 150);
+        t.record(MsgKind::Block, 50);
+        assert_eq!(t.messages(MsgKind::Activation), 2);
+        assert_eq!(t.bytes(MsgKind::Activation), 250);
+        assert_eq!(t.total_bytes(), 300);
+        let mut u = Traffic::new();
+        u.merge(&t);
+        assert_eq!(u.total_bytes(), 300);
+    }
+}

@@ -1,0 +1,121 @@
+//! Node state: every participant's local data and adversarial status.
+//!
+//! A node's *role* (client / shard server / committee member) is decided
+//! per-algorithm and — in BSFL — per-cycle by `AssignNodes`; the node
+//! state here is role-independent, matching the paper's definition of a
+//! node (§III) and its rotation model (§V.C).
+
+use crate::attack::{poison_labels, AttackPlan};
+use crate::config::{ExpConfig, Partition};
+use crate::data::{partition, Dataset};
+use crate::util::rng::Rng;
+
+/// One participant.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: usize,
+    /// Local training split (labels flipped if the node is malicious).
+    pub train: Dataset,
+    /// Local validation split (used for committee scoring in BSFL).
+    /// Kept honest even for malicious nodes — their attack is in what
+    /// they *submit* (poisoned updates / inverted scores), not in what
+    /// they privately hold.
+    pub val: Dataset,
+    pub malicious: bool,
+}
+
+/// Build the full node population for an experiment: partition the
+/// training corpus non-IID, split each node's share into train/val, and
+/// apply the attack plan.
+pub fn build_nodes(
+    cfg: &ExpConfig,
+    corpus: &Dataset,
+    plan: &AttackPlan,
+    rng: &mut Rng,
+) -> Vec<Node> {
+    let parts = match cfg.partition {
+        Partition::LabelShard(runs) => {
+            partition::label_sharded(corpus, cfg.nodes, runs, rng)
+        }
+        Partition::Dirichlet(alpha) => {
+            partition::dirichlet(corpus, cfg.nodes, alpha, rng)
+        }
+    };
+
+    parts
+        .into_iter()
+        .enumerate()
+        .map(|(id, mut local)| {
+            local.shuffle(rng);
+            let val_n = cfg.val_per_node.min(local.len() / 4);
+            let idx_val: Vec<usize> = (0..val_n).collect();
+            let idx_train: Vec<usize> = (val_n..local.len()).collect();
+            let val = local.subset(&idx_val);
+            let mut train = local.subset(&idx_train);
+            train.truncate(cfg.samples_per_node);
+            let malicious = plan.is_malicious(id);
+            if malicious {
+                train = poison_labels(&train);
+            }
+            Node {
+                id,
+                train,
+                val,
+                malicious,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algo;
+    use crate::data::synthetic;
+
+    fn cfg() -> ExpConfig {
+        let mut c = ExpConfig::paper_9(Algo::Bsfl);
+        c.samples_per_node = 64;
+        c.val_per_node = 16;
+        c
+    }
+
+    #[test]
+    fn builds_nine_nodes_with_splits() {
+        let cfg = cfg();
+        let corpus = synthetic::generate(9 * 120, 1);
+        let plan = AttackPlan::benign(9);
+        let nodes = build_nodes(&cfg, &corpus, &plan, &mut Rng::new(2));
+        assert_eq!(nodes.len(), 9);
+        for n in &nodes {
+            assert!(n.train.len() <= 64);
+            assert!(!n.train.is_empty());
+            assert!(!n.val.is_empty());
+            assert!(!n.malicious);
+        }
+    }
+
+    #[test]
+    fn malicious_nodes_have_flipped_train_labels() {
+        let cfg = cfg();
+        let corpus = synthetic::generate(9 * 120, 1);
+        let mut rng = Rng::new(3);
+        let plan = AttackPlan::random_fraction(9, 0.33, &mut rng);
+        let honest = build_nodes(&cfg, &corpus, &AttackPlan::benign(9), &mut Rng::new(4));
+        let attacked = build_nodes(&cfg, &corpus, &plan, &mut Rng::new(4));
+        assert_eq!(plan.count(), 3);
+        for (h, a) in honest.iter().zip(attacked.iter()) {
+            if a.malicious {
+                // same images, rotated labels
+                assert_eq!(h.train.len(), a.train.len());
+                for i in 0..h.train.len() {
+                    assert_eq!(a.train.label(i), (h.train.label(i) + 1) % 10);
+                }
+                // val stays honest
+                assert_eq!(h.val.labels(), a.val.labels());
+            } else {
+                assert_eq!(h.train.labels(), a.train.labels());
+            }
+        }
+    }
+}

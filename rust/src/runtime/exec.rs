@@ -1,0 +1,211 @@
+//! The PJRT execution engine.
+//!
+//! `Runtime::load` creates one CPU PJRT client, parses the manifest, and
+//! compiles every `*.hlo.txt` once (HLO **text** interchange — see
+//! aot.py's module docstring for why not serialized protos).  `execute`
+//! packs `ArgValue`s into literals in manifest order, runs the
+//! executable, and unpacks the result tuple into [`Tensor`]s.
+//!
+//! Every execution is timed; [`Runtime::timing`] exposes cumulative
+//! per-entry stats, which both the netsim compute profile and the §Perf
+//! benchmarks consume.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{Dtype, Manifest, TensorSpec};
+use crate::tensor::Tensor;
+
+/// A borrowed argument for one input slot.
+#[derive(Clone, Copy, Debug)]
+pub enum ArgValue<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl ArgValue<'_> {
+    fn len(&self) -> usize {
+        match self {
+            ArgValue::F32(s) => s.len(),
+            ArgValue::I32(s) => s.len(),
+        }
+    }
+
+    fn dtype(&self) -> Dtype {
+        match self {
+            ArgValue::F32(_) => Dtype::F32,
+            ArgValue::I32(_) => Dtype::I32,
+        }
+    }
+}
+
+/// Cumulative wall-clock stats for one entry point.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EntryTiming {
+    pub calls: u64,
+    pub total_s: f64,
+}
+
+impl EntryTiming {
+    pub fn mean_s(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.total_s / self.calls as f64
+        }
+    }
+}
+
+/// One PJRT client + compiled executables for every manifest entry.
+pub struct Runtime {
+    manifest: Manifest,
+    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    timing: RefCell<BTreeMap<String, EntryTiming>>,
+}
+
+impl Runtime {
+    /// Load the manifest from `dir`, compile all entries on a fresh CPU
+    /// PJRT client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        crate::info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        let mut exes = BTreeMap::new();
+        for (name, entry) in &manifest.entries {
+            let path = dir.join(&entry.file);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            crate::debug!("compiled {name} in {:.2?}", t0.elapsed());
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Runtime {
+            manifest,
+            exes,
+            timing: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Run `entry` with `args` (manifest input order). Returns output
+    /// tensors in manifest output order (all f32 by construction).
+    pub fn execute(&self, entry: &str, args: &[ArgValue<'_>]) -> Result<Vec<Tensor>> {
+        let spec = self.manifest.entry(entry)?;
+        let exe = self
+            .exes
+            .get(entry)
+            .ok_or_else(|| anyhow!("no executable for {entry}"))?;
+        if args.len() != spec.inputs.len() {
+            bail!(
+                "{entry}: {} args for {} inputs",
+                args.len(),
+                spec.inputs.len()
+            );
+        }
+
+        let mut literals = Vec::with_capacity(args.len());
+        for (arg, ispec) in args.iter().zip(spec.inputs.iter()) {
+            literals.push(pack(arg, ispec).with_context(|| format!("{entry}:{}", ispec.name))?);
+        }
+
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("{entry}: execute failed: {e:?}"))?;
+        let root = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("{entry}: empty result"))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{entry}: to_literal: {e:?}"))?;
+        let elapsed = t0.elapsed().as_secs_f64();
+        {
+            let mut tm = self.timing.borrow_mut();
+            let e = tm.entry(entry.to_string()).or_default();
+            e.calls += 1;
+            e.total_s += elapsed;
+        }
+
+        // aot.py lowers with return_tuple=True: always a tuple, even for
+        // single outputs.
+        let parts = root
+            .to_tuple()
+            .map_err(|e| anyhow!("{entry}: tuple decompose: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{entry}: {} outputs for {} specs",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(spec.outputs.iter())
+            .map(|(lit, ospec)| unpack(lit, ospec).with_context(|| format!("{entry}:{}", ospec.name)))
+            .collect()
+    }
+
+    /// Cumulative per-entry timing (entry -> stats).
+    pub fn timing(&self) -> BTreeMap<String, EntryTiming> {
+        self.timing.borrow().clone()
+    }
+
+    /// Reset the timing accumulators (between §Perf bench phases).
+    pub fn reset_timing(&self) {
+        self.timing.borrow_mut().clear();
+    }
+}
+
+fn pack(arg: &ArgValue<'_>, spec: &TensorSpec) -> Result<xla::Literal> {
+    if arg.dtype() != spec.dtype {
+        bail!("dtype mismatch (want {:?})", spec.dtype);
+    }
+    if arg.len() != spec.elements() {
+        bail!(
+            "length {} != shape {:?} ({} elements)",
+            arg.len(),
+            spec.shape,
+            spec.elements()
+        );
+    }
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    let lit = match arg {
+        ArgValue::F32(s) => xla::Literal::vec1(s),
+        ArgValue::I32(s) => xla::Literal::vec1(s),
+    };
+    if spec.shape.is_empty() {
+        // scalar: vec1 of len 1 -> reshape to r0
+        lit.reshape(&[]).map_err(|e| anyhow!("reshape r0: {e:?}"))
+    } else {
+        lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+}
+
+fn unpack(lit: xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
+    if spec.dtype != Dtype::F32 {
+        bail!("non-f32 outputs unsupported");
+    }
+    let v = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("to_vec: {e:?}"))?;
+    Tensor::new(spec.shape.clone(), v)
+}

@@ -1,0 +1,247 @@
+//! `artifacts/manifest.json` parsing.
+//!
+//! The manifest is the single source of truth for entry-point signatures
+//! and initial weights; the Rust side never hard-codes tensor shapes
+//! (DESIGN.md §5.2).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::{Bundle, Tensor};
+use crate::util::json::Json;
+
+/// Element type crossing the PJRT boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// One input/output slot of an entry point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-lowered entry point.
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub seed: u64,
+    pub client_params: Vec<String>,
+    pub server_params: Vec<String>,
+    pub entries: BTreeMap<String, EntrySpec>,
+    /// "client.cw" -> (file, shape)
+    pub init: BTreeMap<String, (String, Vec<usize>)>,
+}
+
+fn parse_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("specs not an array"))?
+        .iter()
+        .map(|s| {
+            let name = s
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("spec missing name"))?
+                .to_string();
+            let shape = s
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("{name}: bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = match s.get("dtype").and_then(Json::as_str) {
+                Some("f32") => Dtype::F32,
+                Some("s32") => Dtype::I32,
+                other => bail!("{name}: unsupported dtype {other:?}"),
+            };
+            Ok(TensorSpec { name, shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+
+        let model = v.get("model").ok_or_else(|| anyhow!("missing model"))?;
+        let names = |key: &str| -> Result<Vec<String>> {
+            model
+                .get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing model.{key}"))?
+                .iter()
+                .map(|n| {
+                    n.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow!("bad name in model.{key}"))
+                })
+                .collect()
+        };
+
+        let mut entries = BTreeMap::new();
+        for (name, e) in v
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("missing entries"))?
+        {
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    file: e
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("{name}: missing file"))?
+                        .to_string(),
+                    inputs: parse_specs(
+                        e.get("inputs").ok_or_else(|| anyhow!("{name}: inputs"))?,
+                    )?,
+                    outputs: parse_specs(
+                        e.get("outputs").ok_or_else(|| anyhow!("{name}: outputs"))?,
+                    )?,
+                },
+            );
+        }
+
+        let mut init = BTreeMap::new();
+        for (key, info) in v
+            .get("init")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("missing init"))?
+        {
+            let file = info
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("init {key}: missing file"))?
+                .to_string();
+            let shape = info
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("init {key}: missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            init.insert(key.clone(), (file, shape));
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            train_batch: v
+                .get("train_batch")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing train_batch"))?,
+            eval_batch: v
+                .get("eval_batch")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing eval_batch"))?,
+            seed: v.get("seed").and_then(Json::as_usize).unwrap_or(42) as u64,
+            client_params: names("client_params")?,
+            server_params: names("server_params")?,
+            entries,
+            init,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("entry `{name}` not in manifest"))
+    }
+
+    /// Load one initial-weight group ("client" or "server") as a Bundle
+    /// in manifest parameter order.
+    pub fn init_bundle(&self, group: &str) -> Result<Bundle> {
+        let names = match group {
+            "client" => &self.client_params,
+            "server" => &self.server_params,
+            _ => bail!("unknown init group {group}"),
+        };
+        let mut tensors = Vec::with_capacity(names.len());
+        for n in names {
+            let (file, shape) = self
+                .init
+                .get(&format!("{group}.{n}"))
+                .ok_or_else(|| anyhow!("init missing {group}.{n}"))?;
+            tensors.push(Tensor::from_le_file(&self.dir.join(file), shape.clone())?);
+        }
+        Bundle::new(names.clone(), tensors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_built_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert!(m.entries.contains_key("client_forward"));
+        assert!(m.entries.contains_key("server_train_step"));
+        assert_eq!(m.client_params, vec!["cw", "cb"]);
+        let e = m.entry("client_forward").unwrap();
+        assert_eq!(e.inputs.last().unwrap().name, "x");
+        assert_eq!(
+            e.inputs.last().unwrap().shape,
+            vec![m.train_batch, 28, 28, 1]
+        );
+    }
+
+    #[test]
+    fn init_bundles_have_manifest_order() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let c = m.init_bundle("client").unwrap();
+        assert_eq!(c.names(), &["cw".to_string(), "cb".to_string()]);
+        assert_eq!(c.tensors()[0].shape(), &[3, 3, 1, 32]);
+        let s = m.init_bundle("server").unwrap();
+        assert_eq!(s.len(), 6);
+        assert!(s.param_count() > 400_000);
+        assert!(m.init_bundle("nope").is_err());
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent")).is_err());
+    }
+}

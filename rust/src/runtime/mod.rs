@@ -1,0 +1,21 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (entry points, tensor
+//!   specs, init weights); everything downstream is manifest-driven.
+//! * [`exec`] — the [`Runtime`]: one PJRT CPU client, one compiled
+//!   executable per entry point, typed pack/unpack between [`Tensor`]s
+//!   and XLA literals, and per-entry timing stats.
+//! * [`model`] — [`ModelOps`]: the five split-model operations
+//!   (client_forward / server_train_step / client_backward / evaluate /
+//!   full_train_step) with weight bundles in and out, plus the compute
+//!   profiler that feeds netsim.
+//!
+//! [`Tensor`]: crate::tensor::Tensor
+
+pub mod exec;
+pub mod manifest;
+pub mod model;
+
+pub use exec::{ArgValue, Runtime};
+pub use manifest::{Dtype, EntrySpec, Manifest, TensorSpec};
+pub use model::{EvalResult, ModelOps, StepStats};

@@ -1,0 +1,304 @@
+//! High-level split-model operations over the [`Runtime`].
+//!
+//! `ModelOps` is what the algorithm orchestrators call: weight bundles
+//! and data batches go in, updated bundles / activations / metrics come
+//! out.  It also derives netsim inputs (activation & gradient message
+//! sizes from the manifest, measured compute times from warm-up runs).
+
+use anyhow::{bail, Result};
+
+use super::exec::{ArgValue, Runtime};
+use crate::data::{Batch, Dataset};
+use crate::netsim::ComputeProfile;
+use crate::tensor::{Bundle, Tensor};
+
+/// Per-batch training metrics (sums, so they aggregate exactly).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    pub loss_sum: f64,
+    pub correct_sum: f64,
+    pub wsum: f64,
+}
+
+impl StepStats {
+    pub fn merge(&mut self, other: StepStats) {
+        self.loss_sum += other.loss_sum;
+        self.correct_sum += other.correct_sum;
+        self.wsum += other.wsum;
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        self.loss_sum / self.wsum.max(1.0)
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        self.correct_sum / self.wsum.max(1.0)
+    }
+}
+
+/// Dataset-level evaluation result.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalResult {
+    pub loss: f64,
+    pub accuracy: f64,
+    pub n: f64,
+}
+
+/// The five split-model operations, typed over bundles and batches.
+pub struct ModelOps<'a> {
+    rt: &'a Runtime,
+}
+
+impl<'a> ModelOps<'a> {
+    pub fn new(rt: &'a Runtime) -> ModelOps<'a> {
+        ModelOps { rt }
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        self.rt
+    }
+
+    pub fn train_batch_size(&self) -> usize {
+        self.rt.manifest().train_batch
+    }
+
+    pub fn eval_batch_size(&self) -> usize {
+        self.rt.manifest().eval_batch
+    }
+
+    /// Batch size of the small `evaluate_small` variant, if the manifest
+    /// has one (perf: committee scoring pads tiny validation sets).
+    pub fn eval_batch_small(&self) -> Option<usize> {
+        self.rt
+            .manifest()
+            .entries
+            .get("evaluate_small")
+            .and_then(|e| e.inputs.iter().find(|s| s.name == "x"))
+            .map(|s| s.shape[0])
+    }
+
+    /// Fresh global models (the seeded init weights every algorithm
+    /// starts from).
+    pub fn init_models(&self) -> Result<(Bundle, Bundle)> {
+        Ok((
+            self.rt.manifest().init_bundle("client")?,
+            self.rt.manifest().init_bundle("server")?,
+        ))
+    }
+
+    /// Wire size of one activation message (A + labels + weights) —
+    /// what a client uploads per batch.
+    pub fn act_bytes(&self) -> usize {
+        let spec = self
+            .rt
+            .manifest()
+            .entry("server_train_step")
+            .expect("manifest entry");
+        let a = spec.inputs.iter().find(|s| s.name == "a").expect("a input");
+        // A as f32 + labels as i32 + weights as f32
+        a.elements() * 4 + self.train_batch_size() * 8
+    }
+
+    /// Wire size of one feedback-gradient message (dA).
+    pub fn grad_bytes(&self) -> usize {
+        let spec = self
+            .rt
+            .manifest()
+            .entry("server_train_step")
+            .expect("manifest entry");
+        let da = spec
+            .outputs
+            .iter()
+            .find(|s| s.name == "da")
+            .expect("da output");
+        da.elements() * 4
+    }
+
+    /// Client half forward: batch -> smashed activation A.
+    pub fn client_forward(&self, client: &Bundle, batch: &Batch) -> Result<Tensor> {
+        let mut args: Vec<ArgValue> = bundle_args(client);
+        args.push(ArgValue::F32(&batch.x));
+        let mut out = self.rt.execute("client_forward", &args)?;
+        Ok(out.remove(0))
+    }
+
+    /// Server step on a batch of activations: updates `server` in place,
+    /// returns (stats, dA).
+    pub fn server_train_step(
+        &self,
+        server: &mut Bundle,
+        a: &Tensor,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<(StepStats, Tensor)> {
+        let lr_arr = [lr];
+        let mut args: Vec<ArgValue> = bundle_args(server);
+        args.push(ArgValue::F32(a.data()));
+        args.push(ArgValue::I32(&batch.y));
+        args.push(ArgValue::F32(&batch.w));
+        args.push(ArgValue::F32(&lr_arr));
+        let out = self.rt.execute("server_train_step", &args)?;
+        let mut it = out.into_iter();
+        let stats = StepStats {
+            loss_sum: scalar(&mut it)?,
+            correct_sum: scalar(&mut it)?,
+            wsum: scalar(&mut it)?,
+        };
+        let da = it.next().ok_or_else(|| anyhow::anyhow!("missing dA"))?;
+        let new_tensors: Vec<Tensor> = it.collect();
+        replace_tensors(server, new_tensors)?;
+        Ok((stats, da))
+    }
+
+    /// Client backprop from dA: updates `client` in place.
+    pub fn client_backward(
+        &self,
+        client: &mut Bundle,
+        batch: &Batch,
+        da: &Tensor,
+        lr: f32,
+    ) -> Result<()> {
+        let lr_arr = [lr];
+        let mut args: Vec<ArgValue> = bundle_args(client);
+        args.push(ArgValue::F32(&batch.x));
+        args.push(ArgValue::F32(da.data()));
+        args.push(ArgValue::F32(&lr_arr));
+        let out = self.rt.execute("client_backward", &args)?;
+        replace_tensors(client, out)?;
+        Ok(())
+    }
+
+    /// Fused client+server step (identical numerics to the split path;
+    /// used by the SL fast path and equivalence tests).
+    pub fn full_train_step(
+        &self,
+        client: &mut Bundle,
+        server: &mut Bundle,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<StepStats> {
+        let lr_arr = [lr];
+        let mut args: Vec<ArgValue> = bundle_args(client);
+        args.extend(bundle_args(server));
+        args.push(ArgValue::F32(&batch.x));
+        args.push(ArgValue::I32(&batch.y));
+        args.push(ArgValue::F32(&batch.w));
+        args.push(ArgValue::F32(&lr_arr));
+        let out = self.rt.execute("full_train_step", &args)?;
+        let mut it = out.into_iter();
+        let stats = StepStats {
+            loss_sum: scalar(&mut it)?,
+            correct_sum: scalar(&mut it)?,
+            wsum: scalar(&mut it)?,
+        };
+        let rest: Vec<Tensor> = it.collect();
+        let nc = client.len();
+        let (c_new, s_new) = rest.split_at(nc);
+        replace_tensors(client, c_new.to_vec())?;
+        replace_tensors(server, s_new.to_vec())?;
+        Ok(stats)
+    }
+
+    /// Full-model evaluation over a dataset.
+    ///
+    /// Picks the executable whose batch shape wastes the least padding:
+    /// datasets no larger than the small variant's batch run through
+    /// `evaluate_small` (4x cheaper for BSFL committee scoring); larger
+    /// sets use the big batch and fall back to the small one for the
+    /// tail when it fits.
+    pub fn evaluate(&self, client: &Bundle, server: &Bundle, ds: &Dataset) -> Result<EvalResult> {
+        if ds.is_empty() {
+            bail!("evaluate on empty dataset");
+        }
+        let big = self.eval_batch_size();
+        let small = self.eval_batch_small();
+
+        let mut loss_sum = 0.0;
+        let mut correct_sum = 0.0;
+        let mut wsum = 0.0;
+        let mut run = |entry: &str, batch: &Batch| -> Result<()> {
+            let mut args: Vec<ArgValue> = bundle_args(client);
+            args.extend(bundle_args(server));
+            args.push(ArgValue::F32(&batch.x));
+            args.push(ArgValue::I32(&batch.y));
+            args.push(ArgValue::F32(&batch.w));
+            let out = self.rt.execute(entry, &args)?;
+            let mut it = out.into_iter();
+            loss_sum += scalar(&mut it)?;
+            correct_sum += scalar(&mut it)?;
+            wsum += scalar(&mut it)?;
+            Ok(())
+        };
+
+        let mut pos = 0usize;
+        while pos < ds.len() {
+            let remaining = ds.len() - pos;
+            let (entry, bsize) = match small {
+                Some(sb) if remaining <= sb => ("evaluate_small", sb),
+                _ => ("evaluate", big),
+            };
+            let take = remaining.min(bsize);
+            let idx: Vec<usize> = (pos..pos + take).collect();
+            let chunk = ds.subset(&idx);
+            let batch = chunk.batches(bsize).next().expect("nonempty chunk");
+            run(entry, &batch)?;
+            pos += take;
+        }
+        Ok(EvalResult {
+            loss: loss_sum / wsum.max(1.0),
+            accuracy: correct_sum / wsum.max(1.0),
+            n: wsum,
+        })
+    }
+
+    /// Measure per-entry compute times on dummy data (feeds netsim).
+    /// `iters` >= 2 recommended: the first call after compile can be
+    /// cold.
+    pub fn profile_compute(&self, iters: usize) -> Result<ComputeProfile> {
+        let (mut client, mut server) = self.init_models()?;
+        let b = self.train_batch_size();
+        let ds = crate::data::synthetic::generate(b.max(self.eval_batch_size()), 0xBEEF);
+        let batch = ds.batches(b).next().expect("one batch");
+
+        self.rt.reset_timing();
+        for _ in 0..iters.max(1) {
+            let a = self.client_forward(&client, &batch)?;
+            let (_, da) = self.server_train_step(&mut server, &a, &batch, 0.0)?;
+            self.client_backward(&mut client, &batch, &da, 0.0)?;
+            self.evaluate(&client, &server, &ds)?;
+        }
+        let t = self.rt.timing();
+        let mean = |name: &str| t.get(name).map(|e| e.mean_s()).unwrap_or(1e-3);
+        Ok(ComputeProfile {
+            client_fwd_s: mean("client_forward"),
+            client_bwd_s: mean("client_backward"),
+            server_step_s: mean("server_train_step"),
+            eval_batch_s: mean("evaluate"),
+        })
+    }
+}
+
+fn bundle_args(b: &Bundle) -> Vec<ArgValue<'_>> {
+    b.tensors().iter().map(|t| ArgValue::F32(t.data())).collect()
+}
+
+fn scalar(it: &mut impl Iterator<Item = Tensor>) -> Result<f64> {
+    let t = it.next().ok_or_else(|| anyhow::anyhow!("missing scalar output"))?;
+    if t.len() != 1 {
+        bail!("expected scalar, got {:?}", t.shape());
+    }
+    Ok(t.data()[0] as f64)
+}
+
+fn replace_tensors(b: &mut Bundle, new: Vec<Tensor>) -> Result<()> {
+    if new.len() != b.len() {
+        bail!("{} new tensors for bundle of {}", new.len(), b.len());
+    }
+    for (old, new) in b.tensors_mut().iter_mut().zip(new.into_iter()) {
+        if old.shape() != new.shape() {
+            bail!("shape drift {:?} -> {:?}", old.shape(), new.shape());
+        }
+        *old = new;
+    }
+    Ok(())
+}

@@ -1,0 +1,191 @@
+//! Named, ordered collections of tensors — one model half's weights.
+//!
+//! Order is manifest order (aot.py) and is preserved through aggregation,
+//! serialization, and the PJRT boundary.
+
+use anyhow::{bail, Result};
+use sha2::{Digest, Sha256};
+
+use super::Tensor;
+
+/// An ordered set of named tensors (e.g. a client model `[cw, cb]` or a
+/// server model `[sw, sb, f1w, f1b, f2w, f2b]`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bundle {
+    names: Vec<String>,
+    tensors: Vec<Tensor>,
+}
+
+impl Bundle {
+    pub fn new(names: Vec<String>, tensors: Vec<Tensor>) -> Result<Bundle> {
+        if names.len() != tensors.len() {
+            bail!("{} names vs {} tensors", names.len(), tensors.len());
+        }
+        Ok(Bundle { names, tensors })
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.tensors
+    }
+
+    pub fn tensors_mut(&mut self) -> &mut [Tensor] {
+        &mut self.tensors
+    }
+
+    pub fn into_tensors(self) -> Vec<Tensor> {
+        self.tensors
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .map(|i| &self.tensors[i])
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Total bytes when shipped between nodes (netsim accounting).
+    pub fn wire_bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.wire_bytes()).sum()
+    }
+
+    /// Structural compatibility: same names, same shapes, same order.
+    pub fn same_structure(&self, other: &Bundle) -> bool {
+        self.names == other.names
+            && self
+                .tensors
+                .iter()
+                .zip(other.tensors.iter())
+                .all(|(a, b)| a.shape() == b.shape())
+    }
+
+    /// In-place `self += alpha * other` over every tensor.
+    pub fn axpy(&mut self, alpha: f32, other: &Bundle) -> Result<()> {
+        if !self.same_structure(other) {
+            bail!("bundle structure mismatch");
+        }
+        for (a, b) in self.tensors.iter_mut().zip(other.tensors.iter()) {
+            a.axpy(alpha, b)?;
+        }
+        Ok(())
+    }
+
+    /// In-place scale of every tensor.
+    pub fn scale(&mut self, alpha: f32) {
+        for t in &mut self.tensors {
+            t.scale(alpha);
+        }
+    }
+
+    /// Zero bundle with this bundle's structure.
+    pub fn zeros_like(&self) -> Bundle {
+        Bundle {
+            names: self.names.clone(),
+            tensors: self
+                .tensors
+                .iter()
+                .map(|t| Tensor::zeros(t.shape().to_vec()))
+                .collect(),
+        }
+    }
+
+    /// Global L2 norm across all tensors.
+    pub fn norm(&self) -> f64 {
+        self.tensors
+            .iter()
+            .map(|t| {
+                let n = t.norm();
+                n * n
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Max |a-b| across all tensors.
+    pub fn max_abs_diff(&self, other: &Bundle) -> Result<f32> {
+        if !self.same_structure(other) {
+            bail!("bundle structure mismatch");
+        }
+        let mut m = 0.0f32;
+        for (a, b) in self.tensors.iter().zip(other.tensors.iter()) {
+            m = m.max(a.max_abs_diff(b)?);
+        }
+        Ok(m)
+    }
+
+    /// SHA-256 over names, shapes, and payloads — the model-update digest
+    /// stored on the blockchain ledger (tamper evidence for BSFL).
+    pub fn digest(&self) -> [u8; 32] {
+        let mut h = Sha256::new();
+        for (name, t) in self.names.iter().zip(self.tensors.iter()) {
+            h.update(name.as_bytes());
+            h.update([0u8]);
+            for d in t.shape() {
+                h.update((*d as u64).to_le_bytes());
+            }
+            h.update(t.to_le_bytes());
+        }
+        h.finalize().into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bundle(vals: &[f32]) -> Bundle {
+        Bundle::new(
+            vec!["w".into(), "b".into()],
+            vec![
+                Tensor::new(vec![2], vals[..2].to_vec()).unwrap(),
+                Tensor::new(vec![1], vals[2..3].to_vec()).unwrap(),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn digest_changes_with_payload() {
+        let a = bundle(&[1.0, 2.0, 3.0]);
+        let mut b = a.clone();
+        assert_eq!(a.digest(), b.digest());
+        b.tensors_mut()[0].data_mut()[0] = 1.0000001;
+        assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn structure_check() {
+        let a = bundle(&[1.0, 2.0, 3.0]);
+        let other = Bundle::new(
+            vec!["w".into()],
+            vec![Tensor::new(vec![2], vec![0.0, 0.0]).unwrap()],
+        )
+        .unwrap();
+        assert!(!a.same_structure(&other));
+        let mut c = a.clone();
+        assert!(c.axpy(1.0, &other).is_err());
+    }
+
+    #[test]
+    fn wire_bytes() {
+        let a = bundle(&[1.0, 2.0, 3.0]);
+        assert_eq!(a.wire_bytes(), 12);
+        assert_eq!(a.param_count(), 3);
+    }
+}

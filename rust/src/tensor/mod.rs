@@ -1,0 +1,12 @@
+//! Flat f32 tensors and named weight bundles.
+//!
+//! Model weights cross the Rust/PJRT boundary as flat little-endian f32
+//! buffers in manifest order; [`Bundle`] is the L3-side representation a
+//! coordinator aggregates, ships between nodes (netsim-accounted), and
+//! hashes onto the blockchain ledger.
+
+mod bundle;
+mod tensor_impl;
+
+pub use bundle::Bundle;
+pub use tensor_impl::Tensor;

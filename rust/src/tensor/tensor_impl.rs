@@ -1,0 +1,176 @@
+//! A minimal dense f32 tensor: shape + contiguous row-major data.
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build from shape and data (length must match the shape product).
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            );
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Bytes on the wire (f32 payload) — used by netsim message accounting.
+    pub fn wire_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Element-wise `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            bail!("axpy shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    /// Element-wise scale in place.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    /// L2 norm.
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Max |a - b| over elements.
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            bail!("diff shape mismatch");
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max))
+    }
+
+    /// Read a little-endian f32 binary file (the `artifacts/init/*.bin`
+    /// format emitted by aot.py).
+    pub fn from_le_file(path: &std::path::Path, shape: Vec<usize>) -> Result<Tensor> {
+        let bytes = std::fs::read(path)?;
+        let n: usize = shape.iter().product();
+        if bytes.len() != 4 * n {
+            bail!(
+                "{}: expected {} bytes for shape {:?}, got {}",
+                path.display(),
+                4 * n,
+                shape,
+                bytes.len()
+            );
+        }
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Tensor::new(shape, data)
+    }
+
+    /// Serialize the payload as little-endian bytes (ledger hashing).
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * 4);
+        for v in &self.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_length() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let t = Tensor::new(vec![], vec![7.0]).unwrap();
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::new(vec![3], vec![10.0, 20.0, 30.0]).unwrap();
+        a.axpy(0.5, &b).unwrap();
+        assert_eq!(a.data(), &[6.0, 12.0, 18.0]);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[12.0, 24.0, 36.0]);
+        let c = Tensor::zeros(vec![4]);
+        assert!(a.axpy(1.0, &c).is_err());
+    }
+
+    #[test]
+    fn norm() {
+        let t = Tensor::new(vec![2], vec![3.0, 4.0]).unwrap();
+        assert!((t.norm() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn le_bytes_roundtrip() {
+        let t = Tensor::new(vec![2, 2], vec![1.5, -2.25, 0.0, 3.0]).unwrap();
+        let bytes = t.to_le_bytes();
+        let back: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(back, t.data());
+    }
+}

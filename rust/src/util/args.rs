@@ -1,0 +1,136 @@
+//! Tiny CLI argument parser: `subcommand --key value --flag positional`.
+//!
+//! The binary's surface is small enough that a hand-rolled parser with
+//! good error messages beats dragging a derive-macro crate into the
+//! offline build.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, `--key value` options, bare
+/// `--flag`s, and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw argv entries (excluding argv[0]).
+    /// `known_flags` lists names that never take a value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        known_flags: &[&str],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare `--` is not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("--{name} expects a value"))?;
+                    out.options.insert(name.to_string(), v);
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process's own arguments.
+    pub fn from_env(known_flags: &[&str]) -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects a number, got `{v}`")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["verbose"]).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("train --algo bsfl --nodes 36 --verbose out.json");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("algo"), Some("bsfl"));
+        assert_eq!(a.get_usize("nodes", 9).unwrap(), 36);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["out.json"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("bench --rounds=5 --lr=0.05");
+        assert_eq!(a.get_usize("rounds", 0).unwrap(), 5);
+        assert!((a.get_f64("lr", 0.0).unwrap() - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Args::parse(
+            ["train".into(), "--algo".into()].into_iter(),
+            &[],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_int_is_error() {
+        let a = parse("x --nodes many");
+        assert!(a.get_usize("nodes", 1).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Hand-rolled commodity substrates.
+//!
+//! The offline crate cache contains only the `xla` crate's closure (plus
+//! `anyhow`/`sha2`), so the pieces that would normally come from crates.io
+//! live here: a seedable PRNG ([`rng`]), a JSON reader/writer ([`json`]),
+//! a CLI argument parser ([`args`]), a scoped parallel-map ([`pool`]),
+//! leveled logging ([`log`]), and a mini property-testing harness
+//! ([`quickcheck`]).
+
+pub mod args;
+pub mod json;
+pub mod log;
+pub mod pool;
+pub mod quickcheck;
+pub mod rng;

@@ -1,0 +1,93 @@
+//! Scoped parallel map over `std::thread` — the replacement for rayon in
+//! this offline build.
+//!
+//! `parallel_map` fans a worklist out over up to `max_threads` OS threads
+//! using `std::thread::scope` (no 'static bound on the closure) and
+//! returns results in input order.  Used by the SSFL/BSFL orchestrators to
+//! run shards concurrently when wall-clock (not virtual-time) parallelism
+//! is wanted.
+
+/// Map `f` over `items` with up to `max_threads` worker threads,
+/// preserving input order in the result.
+pub fn parallel_map<T, R, F>(items: Vec<T>, max_threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = max_threads.max(1).min(n);
+    if threads == 1 {
+        return items.into_iter().map(f).collect();
+    }
+
+    // Work-stealing-free static chunking: item i goes to thread i % threads.
+    // Results are written into a preallocated slot table.
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    {
+        let f = &f;
+        let mut work: Vec<Vec<(usize, T)>> = (0..threads).map(|_| Vec::new()).collect();
+        for (i, item) in items.into_iter().enumerate() {
+            work[i % threads].push((i, item));
+        }
+        // Each thread gets disjoint &mut slots via split logic below.
+        let mut slot_refs: Vec<Vec<(usize, &mut Option<R>)>> =
+            (0..threads).map(|_| Vec::new()).collect();
+        for (i, slot) in slots.iter_mut().enumerate() {
+            slot_refs[i % threads].push((i, slot));
+        }
+        std::thread::scope(|s| {
+            for (chunk, mut refs) in work.into_iter().zip(slot_refs.into_iter()) {
+                s.spawn(move || {
+                    for ((i, item), (j, slot)) in chunk.into_iter().zip(refs.iter_mut()) {
+                        debug_assert_eq!(i, *j);
+                        **slot = Some(f(item));
+                    }
+                });
+            }
+        });
+    }
+    slots.into_iter().map(|s| s.expect("worker panicked")).collect()
+}
+
+/// Number of worker threads to use by default (leave 2 cores for the OS
+/// and the PJRT intra-op pool).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(2).max(1))
+        .unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let xs: Vec<usize> = (0..100).collect();
+        let ys = parallel_map(xs, 7, |x| x * 2);
+        assert_eq!(ys, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let ys = parallel_map(vec![1, 2, 3], 1, |x| x + 1);
+        assert_eq!(ys, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let ys: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(ys.is_empty());
+    }
+
+    #[test]
+    fn closures_share_state_immutably() {
+        let base = 10;
+        let ys = parallel_map(vec![1, 2, 3, 4], 2, |x| x + base);
+        assert_eq!(ys, vec![11, 12, 13, 14]);
+    }
+}

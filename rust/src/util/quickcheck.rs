@@ -1,0 +1,61 @@
+//! Mini property-testing harness (offline stand-in for proptest).
+//!
+//! `forall(seed, iters, gen, prop)` draws `iters` random cases from `gen`
+//! and asserts `prop` on each; on failure it reports the failing case's
+//! iteration index and Debug rendering so the case can be replayed by
+//! seed.  No shrinking — cases are kept small by construction instead.
+
+use super::rng::Rng;
+
+/// Run `prop` against `iters` generated cases. Panics (with the case) on
+/// the first failure — intended for use inside `#[test]`s.
+pub fn forall<T, G, P>(seed: u64, iters: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let mut rng = Rng::new(seed);
+    for i in 0..iters {
+        let case = gen(&mut rng);
+        if !prop(&case) {
+            panic!(
+                "property failed at iteration {i} (seed {seed}):\ncase = {case:#?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result` with a reason.
+pub fn forall_res<T, G, P>(seed: u64, iters: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for i in 0..iters {
+        let case = gen(&mut rng);
+        if let Err(why) = prop(&case) {
+            panic!(
+                "property failed at iteration {i} (seed {seed}): {why}\ncase = {case:#?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        forall(1, 200, |r| r.below(100), |&x| x < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall(1, 200, |r| r.below(100), |&x| x < 50);
+    }
+}

@@ -1,0 +1,245 @@
+//! Property tests over the hand-rolled substrates: JSON, RNG, tensors,
+//! aggregation algebra, netsim monotonicity, partitioning.
+
+use splitfed::aggregation::{fedavg, fedavg_weighted, topk_mean};
+use splitfed::data::{partition, synthetic};
+use splitfed::netsim::{ComputeProfile, LinkModel, ShardSim};
+use splitfed::tensor::{Bundle, Tensor};
+use splitfed::util::json::Json;
+use splitfed::util::quickcheck::{forall, forall_res};
+use splitfed::util::rng::Rng;
+
+fn random_json(r: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { r.below(4) } else { r.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(r.below(2) == 0),
+        2 => Json::Num((r.f64() * 2000.0 - 1000.0).round() / 8.0),
+        3 => {
+            let n = r.below(8);
+            Json::Str((0..n).map(|_| char::from(b'a' + r.below(26) as u8)).collect())
+        }
+        4 => Json::Arr((0..r.below(4)).map(|_| random_json(r, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..r.below(4))
+                .map(|i| (format!("k{i}"), random_json(r, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    forall(
+        0x15011,
+        400,
+        |r| random_json(r, 3),
+        |v| Json::parse(&v.to_string()).as_ref() == Ok(v),
+    );
+}
+
+#[test]
+fn prop_fedavg_of_identical_bundles_is_identity() {
+    forall_res(
+        0xFEDA,
+        200,
+        |r| {
+            let n = r.range(1, 20);
+            let data: Vec<f32> = (0..n).map(|_| r.normal_f32(0.0, 2.0)).collect();
+            let copies = r.range(1, 6);
+            (data, copies)
+        },
+        |(data, copies)| {
+            let b = Bundle::new(
+                vec!["w".into()],
+                vec![Tensor::new(vec![data.len()], data.clone()).unwrap()],
+            )
+            .unwrap();
+            let refs: Vec<&Bundle> = (0..*copies).map(|_| &b).collect();
+            let m = fedavg(&refs).unwrap();
+            let diff = m.max_abs_diff(&b).unwrap();
+            if diff > 1e-5 {
+                return Err(format!("identity violated by {diff}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fedavg_bounded_by_extremes() {
+    // every element of the mean lies within [min, max] of the inputs
+    forall_res(
+        0xFEDB,
+        200,
+        |r| {
+            let k = r.range(2, 6);
+            let n = r.range(1, 10);
+            let bundles: Vec<Vec<f32>> = (0..k)
+                .map(|_| (0..n).map(|_| r.normal_f32(0.0, 3.0)).collect())
+                .collect();
+            bundles
+        },
+        |bundles| {
+            let bs: Vec<Bundle> = bundles
+                .iter()
+                .map(|d| {
+                    Bundle::new(
+                        vec!["w".into()],
+                        vec![Tensor::new(vec![d.len()], d.clone()).unwrap()],
+                    )
+                    .unwrap()
+                })
+                .collect();
+            let refs: Vec<&Bundle> = bs.iter().collect();
+            let m = fedavg(&refs).unwrap();
+            for i in 0..bundles[0].len() {
+                let lo = bundles.iter().map(|b| b[i]).fold(f32::INFINITY, f32::min);
+                let hi = bundles.iter().map(|b| b[i]).fold(f32::NEG_INFINITY, f32::max);
+                let v = m.tensors()[0].data()[i];
+                if v < lo - 1e-5 || v > hi + 1e-5 {
+                    return Err(format!("mean[{i}]={v} outside [{lo}, {hi}]"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_weighted_fedavg_equals_unweighted_for_equal_weights() {
+    forall_res(
+        0xFEDC,
+        100,
+        |r| {
+            let k = r.range(2, 5);
+            (0..k)
+                .map(|_| (0..6).map(|_| r.normal_f32(0.0, 1.0)).collect::<Vec<f32>>())
+                .collect::<Vec<_>>()
+        },
+        |bundles| {
+            let bs: Vec<Bundle> = bundles
+                .iter()
+                .map(|d| {
+                    Bundle::new(
+                        vec!["w".into()],
+                        vec![Tensor::new(vec![d.len()], d.clone()).unwrap()],
+                    )
+                    .unwrap()
+                })
+                .collect();
+            let refs: Vec<&Bundle> = bs.iter().collect();
+            let a = fedavg(&refs).unwrap();
+            let b = fedavg_weighted(&refs, &vec![2.5; refs.len()]).unwrap();
+            if a.max_abs_diff(&b).unwrap() > 1e-5 {
+                return Err("weighted != unweighted for equal weights".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_topk_mean_ignores_nonwinners() {
+    // perturbing a non-winner arbitrarily cannot change the aggregate
+    let mk = |v: f32| {
+        Bundle::new(
+            vec!["w".into()],
+            vec![Tensor::new(vec![2], vec![v, -v]).unwrap()],
+        )
+        .unwrap()
+    };
+    let a = mk(1.0);
+    let b = mk(2.0);
+    let poisoned = mk(1e9);
+    let clean = mk(3.0);
+    let m1 = topk_mean(&[&a, &b, &clean], &[0, 1]).unwrap();
+    let m2 = topk_mean(&[&a, &b, &poisoned], &[0, 1]).unwrap();
+    assert_eq!(m1, m2);
+}
+
+#[test]
+fn prop_shardsim_monotonic() {
+    let sim = ShardSim {
+        link: LinkModel::lan(),
+        prof: ComputeProfile::synthetic_default(),
+        act_bytes: 800_000,
+        grad_bytes: 800_000,
+    };
+    forall_res(
+        0x2157,
+        100,
+        |r| (r.range(1, 20), r.range(1, 12)),
+        |&(clients, batches)| {
+            let base = sim.round(clients, batches).round_s;
+            let more_clients = sim.round(clients + 1, batches).round_s;
+            let more_batches = sim.round(clients, batches + 1).round_s;
+            if more_clients + 1e-12 < base {
+                return Err(format!("adding a client sped things up: {base} -> {more_clients}"));
+            }
+            if more_batches <= base {
+                return Err("adding a batch did not slow things down".into());
+            }
+            // sequential >= parallel always
+            let seq = sim.round_sequential(clients, batches, 1000).round_s;
+            if seq + 1e-9 < base {
+                return Err("sequential faster than parallel".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_partitions_preserve_size_and_are_deterministic() {
+    forall_res(
+        0x9A57,
+        30,
+        |r| {
+            let nodes = r.range(2, 12);
+            let seed = r.next_u64();
+            (nodes, seed)
+        },
+        |&(nodes, seed)| {
+            let ds = synthetic::generate(nodes * 60, seed);
+            let a = partition::label_sharded(&ds, nodes, 2, &mut Rng::new(seed));
+            let b = partition::label_sharded(&ds, nodes, 2, &mut Rng::new(seed));
+            if a.len() != nodes {
+                return Err("wrong node count".into());
+            }
+            for (x, y) in a.iter().zip(b.iter()) {
+                if x.labels() != y.labels() {
+                    return Err("nondeterministic partition".into());
+                }
+            }
+            let sizes: Vec<usize> = a.iter().map(|d| d.len()).collect();
+            if sizes.iter().any(|&s| s != sizes[0] || s == 0) {
+                return Err(format!("uneven sizes {sizes:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bundle_digest_is_injective_on_perturbation() {
+    forall(
+        0xD16E,
+        200,
+        |r| {
+            let n = r.range(1, 30);
+            let data: Vec<f32> = (0..n).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let idx = r.below(n);
+            (data, idx)
+        },
+        |(data, idx)| {
+            let b = Bundle::new(
+                vec!["w".into()],
+                vec![Tensor::new(vec![data.len()], data.clone()).unwrap()],
+            )
+            .unwrap();
+            let mut b2 = b.clone();
+            b2.tensors_mut()[0].data_mut()[*idx] += 1e-3;
+            b.digest() != b2.digest()
+        },
+    );
+}

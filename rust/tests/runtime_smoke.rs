@@ -1,0 +1,116 @@
+//! Integration: the full AOT bridge — Rust loads the HLO-text artifacts,
+//! compiles them on PJRT, and the numerics behave like a training step
+//! should (loss decreases, split == fused, eval is consistent).
+//!
+//! Requires `make artifacts` to have been run; tests no-op otherwise
+//! (CI runs artifacts first).
+
+use std::path::PathBuf;
+
+use splitfed::data::synthetic;
+use splitfed::runtime::{ModelOps, Runtime};
+
+fn artifacts() -> Option<Runtime> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("runtime load"))
+}
+
+#[test]
+fn loads_and_executes_all_entries() {
+    let rt = match artifacts() {
+        Some(rt) => rt,
+        None => return,
+    };
+    let ops = ModelOps::new(&rt);
+    let (mut client, mut server) = ops.init_models().unwrap();
+    let ds = synthetic::generate(ops.train_batch_size(), 1);
+    let batch = ds.batches(ops.train_batch_size()).next().unwrap();
+
+    // split path
+    let a = ops.client_forward(&client, &batch).unwrap();
+    assert_eq!(a.shape(), &[ops.train_batch_size(), 14, 14, 32]);
+    let (stats, da) = ops.server_train_step(&mut server, &a, &batch, 0.05).unwrap();
+    assert!(stats.wsum as usize == ops.train_batch_size());
+    assert!(stats.mean_loss() > 0.0 && stats.mean_loss() < 20.0);
+    assert_eq!(da.shape(), a.shape());
+    ops.client_backward(&mut client, &batch, &da, 0.05).unwrap();
+
+    // eval path
+    let eval = ops.evaluate(&client, &server, &ds).unwrap();
+    assert!(eval.loss > 0.0);
+    assert!((0.0..=1.0).contains(&eval.accuracy));
+}
+
+#[test]
+fn split_equals_fused_through_pjrt() {
+    let rt = match artifacts() {
+        Some(rt) => rt,
+        None => return,
+    };
+    let ops = ModelOps::new(&rt);
+    let (c0, s0) = ops.init_models().unwrap();
+    let ds = synthetic::generate(ops.train_batch_size(), 2);
+    let batch = ds.batches(ops.train_batch_size()).next().unwrap();
+
+    let (mut c1, mut s1) = (c0.clone(), s0.clone());
+    let a = ops.client_forward(&c1, &batch).unwrap();
+    let (st1, da) = ops.server_train_step(&mut s1, &a, &batch, 0.05).unwrap();
+    ops.client_backward(&mut c1, &batch, &da, 0.05).unwrap();
+
+    let (mut c2, mut s2) = (c0.clone(), s0.clone());
+    let st2 = ops.full_train_step(&mut c2, &mut s2, &batch, 0.05).unwrap();
+
+    assert_eq!(st1.loss_sum, st2.loss_sum);
+    assert!(c1.max_abs_diff(&c2).unwrap() == 0.0, "client weights differ");
+    assert!(s1.max_abs_diff(&s2).unwrap() == 0.0, "server weights differ");
+}
+
+#[test]
+fn sgd_reduces_loss_on_fixed_batch() {
+    let rt = match artifacts() {
+        Some(rt) => rt,
+        None => return,
+    };
+    let ops = ModelOps::new(&rt);
+    let (mut client, mut server) = ops.init_models().unwrap();
+    let ds = synthetic::generate(ops.train_batch_size(), 3);
+    let batch = ds.batches(ops.train_batch_size()).next().unwrap();
+
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..8 {
+        let st = ops.full_train_step(&mut client, &mut server, &batch, 0.05).unwrap();
+        last = st.mean_loss();
+        first.get_or_insert(last);
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first * 0.8,
+        "loss did not decrease: {first} -> {last}"
+    );
+}
+
+#[test]
+fn compute_profile_is_sane() {
+    let rt = match artifacts() {
+        Some(rt) => rt,
+        None => return,
+    };
+    let ops = ModelOps::new(&rt);
+    let prof = ops.profile_compute(2).unwrap();
+    for (name, v) in [
+        ("client_fwd", prof.client_fwd_s),
+        ("client_bwd", prof.client_bwd_s),
+        ("server_step", prof.server_step_s),
+        ("eval", prof.eval_batch_s),
+    ] {
+        assert!(v > 0.0 && v < 60.0, "{name} = {v}s");
+    }
+    // message sizes from the manifest
+    assert_eq!(ops.grad_bytes(), 32 * 14 * 14 * 32 * 4);
+    assert!(ops.act_bytes() > ops.grad_bytes());
+}
