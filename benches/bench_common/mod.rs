@@ -6,6 +6,10 @@
 //! `cargo bench` finishes in minutes; `paper` reproduces the full
 //! settings.
 
+// Each bench target compiles this module independently; not every bench
+// uses every helper, so silence per-target dead-code noise.
+#![allow(dead_code)]
+
 use std::path::Path;
 
 use splitfed::exp::{Harness, Scale};

@@ -1,18 +1,27 @@
 //! Microbench — per-entry PJRT execution latency (the §Perf evidence for
-//! Layer 3: how much time is XLA compute vs coordinator overhead).
+//! Layer 3: how much time is XLA compute vs coordinator overhead), plus
+//! the serial-vs-parallel shard execution phase that tracks the perf
+//! trajectory of wall-clock sharding.
 //!
-//! Reports mean/min/max per entry point over repeated executions, plus
-//! the L3 overhead of a full SSFL round (everything that is not
-//! `execute`).
+//! Reports mean/min/max per entry point over repeated executions, the L3
+//! overhead of a full SSFL round (everything that is not `execute`), and
+//! `threads=1` vs `threads=N` round wall time for a 4-shard SSFL run —
+//! written as JSON under `results/bench/runtime_exec/` so successive PRs
+//! can compare.
 
 mod bench_common;
 
 use std::path::Path;
 use std::time::Instant;
 
+use splitfed::algos::common::TrainCtx;
 use splitfed::config::{Algo, ExpConfig};
 use splitfed::data::synthetic;
+use splitfed::metrics::RunResult;
+use splitfed::netsim::ComputeProfile;
 use splitfed::runtime::{ModelOps, Runtime};
+use splitfed::util::json::{num, obj, s, Json};
+use splitfed::util::pool;
 
 fn main() -> anyhow::Result<()> {
     splitfed::util::log::init_from_env();
@@ -46,8 +55,12 @@ fn main() -> anyhow::Result<()> {
     }
 
     // L3 overhead measurement: full SSFL round wall time vs time inside
-    // execute()
+    // execute().  Pinned to threads=1: with parallel shards the per-call
+    // timings overlap and their sum exceeds wall time, which would make
+    // "overhead = wall - inside" negative; the parallel phase below
+    // measures wall-clock speedup separately.
     let mut cfg = ExpConfig::paper_9(Algo::Ssfl);
+    cfg.threads = 1;
     cfg.rounds = 2;
     cfg.samples_per_node = 128;
     cfg.val_per_node = 32;
@@ -65,5 +78,76 @@ fn main() -> anyhow::Result<()> {
     println!("  inside execute  {:>8.2} s ({:.1}%)", inside, 100.0 * inside / wall);
     println!("  L3 overhead     {:>8.2} s ({:.1}%)", wall - inside, 100.0 * (wall - inside) / wall);
     println!("\ntarget (DESIGN.md §Perf): overhead < 10% of wall");
+
+    // ---- serial vs parallel shard execution ------------------------------
+    // 4 shards x 1 client (8 nodes): the smallest topology where the
+    // paper's shard parallelism can show a >= 2x wall-clock win on a
+    // >= 4-core machine.  Both runs share one fixed compute profile so
+    // the virtual-time records are comparable bit-for-bit; the JSON
+    // below is the perf-trajectory artifact tracked across PRs.
+    let scale = bench_common::scale();
+    let seed = bench_common::seed();
+    let rounds = match scale {
+        splitfed::exp::Scale::Smoke => 2usize,
+        splitfed::exp::Scale::Small => 4,
+        splitfed::exp::Scale::Paper => 8,
+    };
+    let spn = match scale {
+        splitfed::exp::Scale::Smoke => 64usize,
+        splitfed::exp::Scale::Small => 128,
+        splitfed::exp::Scale::Paper => 512,
+    };
+    let mut pcfg = ExpConfig::paper_9(Algo::Ssfl);
+    pcfg.nodes = 8;
+    pcfg.shards = 4;
+    pcfg.clients_per_shard = 1;
+    pcfg.rounds = rounds;
+    pcfg.samples_per_node = spn;
+    pcfg.val_per_node = 32;
+    pcfg.test_samples = 128;
+    pcfg.seed = seed;
+    let corpus = synthetic::generate(pcfg.nodes * (spn + 40), seed ^ 0x51);
+    let val = synthetic::generate(128, seed ^ 0x52);
+    let test = synthetic::generate(128, seed ^ 0x53);
+
+    let par_threads = pool::default_threads().min(pcfg.shards).max(2);
+    let timed = |threads: usize| -> anyhow::Result<(RunResult, f64)> {
+        let mut cfg = pcfg.clone();
+        cfg.threads = threads;
+        let mut ctx = TrainCtx::with_profile(&cfg, &ops, ComputeProfile::synthetic_default());
+        let t0 = Instant::now();
+        let r = splitfed::algos::ssfl::run_with_ctx(&mut ctx, &corpus, &val, &test)?;
+        Ok((r, t0.elapsed().as_secs_f64()))
+    };
+    // executables are already warm from the phases above
+    let (serial_run, serial_s) = timed(1)?;
+    let (parallel_run, parallel_s) = timed(par_threads)?;
+    let speedup = serial_s / parallel_s.max(1e-9);
+    let digests_match = serial_run.model_digest == parallel_run.model_digest;
+
+    println!("\nserial vs parallel shard execution ({rounds}-round SSFL, 4 shards):");
+    println!("  threads=1            {:>8.2} s  ({:.2} s/round)", serial_s, serial_s / rounds as f64);
+    println!("  threads={par_threads}            {:>8.2} s  ({:.2} s/round)", parallel_s, parallel_s / rounds as f64);
+    println!("  speedup              {:>8.2}x  (target >= 2x on >= 4 cores)", speedup);
+    println!("  digests match        {digests_match}");
+
+    let out_dir = Path::new("results/bench/runtime_exec");
+    std::fs::create_dir_all(out_dir)?;
+    let doc: Json = obj(vec![
+        ("scale", s(&format!("{scale:?}").to_lowercase())),
+        ("seed", num(seed as f64)),
+        ("shards", num(pcfg.shards as f64)),
+        ("rounds", num(rounds as f64)),
+        ("threads_parallel", num(par_threads as f64)),
+        ("serial_wall_s", num(serial_s)),
+        ("parallel_wall_s", num(parallel_s)),
+        ("serial_round_s", num(serial_s / rounds as f64)),
+        ("parallel_round_s", num(parallel_s / rounds as f64)),
+        ("speedup", num(speedup)),
+        ("digests_match", Json::Bool(digests_match)),
+    ]);
+    std::fs::write(out_dir.join("roundtime.json"), doc.to_string())?;
+    println!("  wrote {}", out_dir.join("roundtime.json").display());
+    anyhow::ensure!(digests_match, "threads=1 vs threads={par_threads} diverged");
     Ok(())
 }

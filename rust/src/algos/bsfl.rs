@@ -29,9 +29,10 @@ use crate::netsim::{self, MsgKind};
 use crate::nodes::Node;
 use crate::runtime::{ModelOps, StepStats};
 use crate::tensor::Bundle;
+use crate::util::pool::parallel_map;
 
 use super::common::{
-    finish_run, make_nodes, push_round_record, run_shard_round, EarlyStop, TrainCtx,
+    finish_run, make_nodes, push_round_record, run_shard_cycle, EarlyStop, TrainCtx,
 };
 
 /// Everything a BSFL run leaves behind for inspection (ledger audits,
@@ -65,6 +66,7 @@ pub fn run_with_ctx(
     testset: &Dataset,
 ) -> Result<(RunResult, BsflArtifacts)> {
     let cfg = ctx.cfg;
+    let threads = cfg.worker_threads();
     let nodes = make_nodes(cfg, corpus);
     let mut chain = Chain::new();
     let mut store = ModelStore::new();
@@ -115,29 +117,34 @@ pub fn run_with_ctx(
         committees.push(assignment.committee.clone());
         assignments.push(assignment.clone());
 
-        // ---- shard training (parallel in virtual time) ---------------------
+        // ---- shard training (parallel in virtual time AND wall-clock) ------
+        // Shards fan out over the worker pool; per-shard state lives in a
+        // forked ShardCtx, and results merge back in shard-index order so
+        // the ledger and loss curves are bit-identical at any `threads`.
         let mut shard_servers: Vec<Bundle> = Vec::with_capacity(cfg.shards);
         let mut shard_client_models: Vec<Vec<Bundle>> = Vec::with_capacity(cfg.shards);
         let mut shard_times = Vec::with_capacity(cfg.shards);
         let mut stats = StepStats::default();
-        for shard in 0..cfg.shards {
-            let members: Vec<&Node> = assignment.clients[shard]
-                .iter()
-                .map(|&id| &nodes[id])
-                .collect();
-            let mut server_i = server_global.clone();
-            let mut client_models = vec![client_global.clone(); members.len()];
-            let mut t_shard = 0.0;
-            for _ in 0..cfg.inner_rounds {
-                let (new_server, st, t) =
-                    run_shard_round(ctx, &server_i, &mut client_models, &members)?;
-                server_i = new_server;
-                stats.merge(st);
-                t_shard += t;
-            }
-            shard_servers.push(server_i);
-            shard_client_models.push(client_models);
-            shard_times.push(t_shard);
+        let outcomes = {
+            let ctx_ref: &TrainCtx<'_> = ctx;
+            let server_ref = &server_global;
+            let client_ref = &client_global;
+            let assignment_ref = &assignment;
+            parallel_map((0..cfg.shards).collect(), threads, |shard| {
+                let members: Vec<&Node> = assignment_ref.clients[shard]
+                    .iter()
+                    .map(|&id| &nodes[id])
+                    .collect();
+                run_shard_cycle(ctx_ref, shard, server_ref, client_ref, &members)
+            })
+        };
+        for outcome in outcomes {
+            let out = outcome?;
+            ctx.traffic.merge(&out.traffic);
+            stats.merge(out.stats);
+            shard_servers.push(out.server);
+            shard_client_models.push(out.clients);
+            shard_times.push(out.vtime_s);
         }
         let train_s = netsim::parallel(&shard_times);
 
@@ -187,26 +194,47 @@ pub fn run_with_ctx(
         let distribute_s = ctx.wan.transfer_s(pull_bytes); // parallel pulls
 
         // ---- committee evaluation (Algorithm 3 `Evaluate`) ------------------
-        for (m_shard, &member) in assignment.committee.iter().enumerate() {
-            let judge = &nodes[member];
-            let mut judged: Vec<(usize, f64)> = Vec::new();
-            for shard in 0..cfg.shards {
-                if shard == m_shard {
-                    continue;
+        // Cross-evaluations are read-only on models and validation data,
+        // so members judge concurrently; scores post to the ledger
+        // serially in committee order (a deterministic total order, so
+        // the chain is identical to the serial path).
+        let member_scores = {
+            let ops = ctx.ops;
+            let shard_servers_ref = &shard_servers;
+            let shard_client_models_ref = &shard_client_models;
+            let nodes_ref = &nodes;
+            let work: Vec<(usize, usize)> = assignment
+                .committee
+                .iter()
+                .enumerate()
+                .map(|(m_shard, &member)| (m_shard, member))
+                .collect();
+            type MemberScores = (usize, Vec<(usize, f64)>, Vec<f64>);
+            parallel_map(work, threads, |(m_shard, member)| -> Result<MemberScores> {
+                let judge = &nodes_ref[member];
+                let mut judged: Vec<(usize, f64)> = Vec::new();
+                for shard in 0..cfg.shards {
+                    if shard == m_shard {
+                        continue;
+                    }
+                    let mut losses: Vec<f64> = Vec::new();
+                    for cm in &shard_client_models_ref[shard] {
+                        let ev = ops.evaluate(cm, &shard_servers_ref[shard], &judge.val)?;
+                        losses.push(ev.loss);
+                    }
+                    judged.push((shard, crate::blockchain::median(&losses)));
                 }
-                let mut losses: Vec<f64> = Vec::new();
-                for cm in &shard_client_models[shard] {
-                    let ev = ctx.ops.evaluate(cm, &shard_servers[shard], &judge.val)?;
-                    losses.push(ev.loss);
-                }
-                judged.push((shard, crate::blockchain::median(&losses)));
-            }
-            let values: Vec<f64> = judged.iter().map(|&(_, v)| v).collect();
-            let reported = if judge.malicious && cfg.voting_attack {
-                invert_scores(&values)
-            } else {
-                values
-            };
+                let values: Vec<f64> = judged.iter().map(|&(_, v)| v).collect();
+                let reported = if judge.malicious && cfg.voting_attack {
+                    invert_scores(&values)
+                } else {
+                    values
+                };
+                Ok((member, judged, reported))
+            })
+        };
+        for res in member_scores {
+            let (member, judged, reported) = res?;
             for ((shard, _), value) in judged.iter().zip(reported.iter()) {
                 EvaluationPropose::post_score(
                     &mut chain, vtime, cycle, &assignment, member, *shard, *value,

@@ -4,6 +4,23 @@
 //! [`run_shard_round`], so loss curves across SL/SFL/SSFL/BSFL differ
 //! only by coordination (sequential vs parallel vs sharded vs
 //! committee-filtered aggregation) — the comparison the paper makes.
+//!
+//! ## Threading model
+//!
+//! State is split in two so shards can run on worker threads:
+//!
+//! * [`TrainCtx`] — the run-level context (links, global traffic tally,
+//!   root RNG, wall clock).  It lives on the orchestrator thread and is
+//!   only ever borrowed immutably while shards are in flight.
+//! * [`ShardCtx`] — everything one shard mutates while training: its own
+//!   [`Traffic`], a salted RNG stream derived from `seed ^ shard_id`
+//!   (stable no matter which thread runs the shard, see [`shard_rng`]),
+//!   and the
+//!   shard's virtual-time clock.  Fork one per shard with
+//!   [`TrainCtx::fork_shard`], run the shard (possibly via
+//!   `util::pool::parallel_map`), then merge results back **in
+//!   shard-index order** with [`TrainCtx::absorb_shard`] so traffic,
+//!   stats, and loss curves are bit-identical to a serial execution.
 
 use std::time::Instant;
 
@@ -32,6 +49,51 @@ pub struct TrainCtx<'a> {
     pub traffic: Traffic,
     pub rng: Rng,
     t_start: Instant,
+}
+
+/// Per-shard execution state — private to one shard for the duration of
+/// a cycle, so shards can train on separate threads without sharing any
+/// mutable state.  Created by [`TrainCtx::fork_shard`], folded back by
+/// [`TrainCtx::absorb_shard`].  Determinism across thread counts comes
+/// from this isolation plus shard-index-order merging; the `rng` stream
+/// is reserved for future per-shard stochastic choices (see
+/// [`shard_rng`]).
+pub struct ShardCtx<'a> {
+    pub shard_id: usize,
+    pub ops: &'a ModelOps<'a>,
+    pub cfg: &'a ExpConfig,
+    pub sim: ShardSim,
+    /// This shard's private traffic tally (merged into the run tally in
+    /// shard-index order; `Traffic` sums are order-independent anyway).
+    pub traffic: Traffic,
+    /// Deterministic per-shard stream: identical whether the shard runs
+    /// on the main thread or a pool worker.  No training code draws
+    /// from it yet — see [`shard_rng`] for why it exists anyway.
+    pub rng: Rng,
+    /// Virtual seconds this shard has accumulated in the current cycle.
+    pub vtime_s: f64,
+}
+
+/// Salt for per-shard RNG streams, keeping them disjoint from the other
+/// root-seed consumers (`make_nodes`/`attack_plan` use `Rng::new(seed)`
+/// directly — without the salt, shard 0's stream would replay the
+/// node-partition draws).
+const SHARD_STREAM_SALT: u64 = 0x5AAD_C7F0_D15C_0000;
+
+/// The per-shard RNG stream: `seed ^ shard_id` under a fixed salt.
+/// Injective in `shard_id`, so distinct shards always get distinct
+/// xoshiro states, and never equal to the node-building stream
+/// (both asserted by the property tests in `rust/tests/prop_pool.rs`).
+///
+/// Training currently draws nothing from this stream — determinism
+/// across thread counts comes from deterministic batch iteration plus
+/// merging shard results in shard-index order.  The stream exists so
+/// future per-shard stochastic choices (client sampling, dropout
+/// schedules) stay deterministic under any scheduling, instead of
+/// reaching for a shared RNG whose draw order would depend on thread
+/// interleaving.
+pub fn shard_rng(seed: u64, shard_id: usize) -> Rng {
+    Rng::new(seed ^ SHARD_STREAM_SALT ^ shard_id as u64)
 }
 
 impl<'a> TrainCtx<'a> {
@@ -70,6 +132,29 @@ impl<'a> TrainCtx<'a> {
         self.t_start.elapsed().as_secs_f64()
     }
 
+    /// Split off the state one shard needs; safe to move to a worker
+    /// thread (everything inside is owned or `Sync`).
+    pub fn fork_shard(&self, shard_id: usize) -> ShardCtx<'a> {
+        ShardCtx {
+            shard_id,
+            ops: self.ops,
+            cfg: self.cfg,
+            sim: self.sim.clone(),
+            traffic: Traffic::new(),
+            rng: shard_rng(self.cfg.seed, shard_id),
+            vtime_s: 0.0,
+        }
+    }
+
+    /// Fold a finished shard's accounting back into the run. Callers
+    /// absorb in shard-index order to keep merge sequences identical
+    /// between serial and parallel execution.
+    pub fn absorb_shard(&mut self, shard: &ShardCtx<'_>) {
+        self.traffic.merge(&shard.traffic);
+    }
+}
+
+impl ShardCtx<'_> {
     /// Batches one client contributes per round (E epochs over its local
     /// training split).
     pub fn batches_per_client(&self, node: &Node) -> usize {
@@ -91,7 +176,7 @@ impl<'a> TrainCtx<'a> {
 /// Updates `client` and `server_copy` in place; returns accumulated
 /// stats.
 pub fn train_client_on_server_copy(
-    ctx: &mut TrainCtx<'_>,
+    ctx: &mut ShardCtx<'_>,
     client: &mut Bundle,
     server_copy: &mut Bundle,
     node: &Node,
@@ -121,7 +206,7 @@ pub fn train_client_on_server_copy(
 /// Returns (updated per-client models, new shard server model, stats,
 /// virtual round seconds).
 pub fn run_shard_round(
-    ctx: &mut TrainCtx<'_>,
+    ctx: &mut ShardCtx<'_>,
     server_model: &Bundle,
     client_models: &mut [Bundle],
     clients: &[&Node],
@@ -148,6 +233,48 @@ pub fn run_shard_round(
     Ok((new_server, stats, round.round_s))
 }
 
+/// Output of one shard's full cycle ([`run_shard_cycle`]): the trained
+/// shard-server model, the shard's client models in member order, the
+/// summed step stats, the shard's virtual time, and its private traffic.
+pub struct ShardCycleOut {
+    pub server: Bundle,
+    pub clients: Vec<Bundle>,
+    pub stats: StepStats,
+    pub vtime_s: f64,
+    pub traffic: Traffic,
+}
+
+/// One shard's whole cycle: clone the globals, run `inner_rounds` SFL
+/// rounds, return everything the aggregator needs.  This is the unit the
+/// SSFL/BSFL orchestrators fan out over `util::pool::parallel_map`; it
+/// only borrows `TrainCtx` immutably, so any number of shards can run
+/// concurrently against the shared PJRT runtime.
+pub fn run_shard_cycle(
+    ctx: &TrainCtx<'_>,
+    shard_id: usize,
+    server_global: &Bundle,
+    client_global: &Bundle,
+    members: &[&Node],
+) -> Result<ShardCycleOut> {
+    let mut s = ctx.fork_shard(shard_id);
+    let mut server_i = server_global.clone();
+    let mut client_models = vec![client_global.clone(); members.len()];
+    let mut stats = StepStats::default();
+    for _ in 0..ctx.cfg.inner_rounds {
+        let (new_server, st, t) = run_shard_round(&mut s, &server_i, &mut client_models, members)?;
+        server_i = new_server;
+        stats.merge(st);
+        s.vtime_s += t;
+    }
+    Ok(ShardCycleOut {
+        server: server_i,
+        clients: client_models,
+        stats,
+        vtime_s: s.vtime_s,
+        traffic: s.traffic,
+    })
+}
+
 /// One *parallel-SL* round against a single **shared** server-side model
 /// (SplitFed's main-server dynamic, and the source of the paper's
 /// "imbalanced effective learning rate", §IV.B): the shared server model
@@ -161,7 +288,7 @@ pub fn run_shard_round(
 /// averaging (Algorithm 1): bounding that drift to J=clients-per-shard
 /// and averaging shard servers is exactly the smoothing SSFL adds.
 pub fn run_interleaved_round(
-    ctx: &mut TrainCtx<'_>,
+    ctx: &mut ShardCtx<'_>,
     server_model: &mut Bundle,
     client_models: &mut [Bundle],
     clients: &[&Node],
@@ -291,6 +418,15 @@ pub fn make_nodes(cfg: &ExpConfig, corpus: &Dataset) -> Vec<Node> {
     build_nodes(cfg, corpus, &plan, &mut rng)
 }
 
+/// Hex rendering of a 32-byte digest (ledger + run-result fingerprints).
+pub fn hex_digest(d: &[u8; 32]) -> String {
+    let mut s = String::with_capacity(64);
+    for b in d {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
 /// Finalize a run result with test-set evaluation.
 pub fn finish_run(
     ctx: &TrainCtx<'_>,
@@ -302,6 +438,11 @@ pub fn finish_run(
     stopped_early: bool,
 ) -> Result<RunResult> {
     let test = ctx.ops.evaluate(client, server, testset)?;
+    let model_digest = format!(
+        "{}:{}",
+        hex_digest(&client.digest()),
+        hex_digest(&server.digest())
+    );
     Ok(RunResult {
         algo: ctx.cfg.algo.name().to_string(),
         label,
@@ -311,5 +452,6 @@ pub fn finish_run(
         stopped_early,
         traffic: ctx.traffic.clone(),
         wall_s: ctx.wall_s(),
+        model_digest,
     })
 }

@@ -52,8 +52,11 @@ pub fn run_with_ctx(
         // the single SL server model is SHARED across all their batches
         // (the scalability-breaking update imbalance, §IV.B).
         let mut client_models = vec![client_global.clone(); clients.len()];
+        // SFL is a single logical shard; fork shard 0 and absorb after.
+        let mut sctx = ctx.fork_shard(0);
         let (stats, mut round_s) =
-            run_interleaved_round(ctx, &mut server_global, &mut client_models, &clients)?;
+            run_interleaved_round(&mut sctx, &mut server_global, &mut client_models, &clients)?;
+        ctx.absorb_shard(&sctx);
 
         // FL server aggregation of client models (upload + broadcast)
         let refs: Vec<&crate::tensor::Bundle> = client_models.iter().collect();

@@ -51,21 +51,26 @@ pub fn run_with_ctx(
     for round in 0..cfg.rounds {
         let mut stats = StepStats::default();
         let mut batches_total = 0usize;
+        // SL is a single logical shard: fork shard 0's context for the
+        // round, absorb its traffic afterwards (same totals as before
+        // the TrainCtx/ShardCtx split — Traffic sums are order-free).
+        let mut sctx = ctx.fork_shard(0);
         for node in clients {
             // sequential: the SHARED server model is updated in place —
             // no per-client copies in SL.
             let st = train_client_on_server_copy(
-                ctx,
+                &mut sctx,
                 &mut client_model,
                 &mut server_model,
                 node,
             )?;
             stats.merge(st);
-            batches_total += ctx.batches_per_client(node);
+            batches_total += sctx.batches_per_client(node);
             // client-model relay to the next client
-            ctx.traffic
+            sctx.traffic
                 .record(MsgKind::ModelUpdate, client_model.wire_bytes());
         }
+        ctx.absorb_shard(&sctx);
 
         let per_client = batches_total / clients.len().max(1);
         let round_s = ctx

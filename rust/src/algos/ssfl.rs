@@ -3,7 +3,10 @@
 //!
 //! Static topology: nodes 0..I are shard servers, the remaining nodes are
 //! dealt round-robin as clients.  Each cycle every shard runs `R`
-//! (inner_rounds) SFL rounds in parallel; then the FL server FedAvgs the
+//! (inner_rounds) SFL rounds in parallel — in *virtual* time for the
+//! paper's round-time model, and in *wall-clock* time via
+//! `util::pool::parallel_map` (`cfg.threads` workers, bit-identical
+//! results at any thread count); then the FL server FedAvgs the
 //! shard server models (`W^S_{t+1} = mean_i W^S_{i,t}`) **and** all client
 //! models (Algorithm 1 lines 24-28).  Averaging the shard servers halves
 //! the server model's effective learning rate imbalance — the paper's fix
@@ -19,9 +22,10 @@ use crate::netsim::{self, MsgKind};
 use crate::nodes::Node;
 use crate::runtime::{ModelOps, StepStats};
 use crate::tensor::Bundle;
+use crate::util::pool::parallel_map;
 
 use super::common::{
-    finish_run, make_nodes, push_round_record, run_shard_round, ship_model, EarlyStop,
+    finish_run, make_nodes, push_round_record, run_shard_cycle, ship_model, EarlyStop,
     TrainCtx,
 };
 
@@ -61,28 +65,35 @@ pub fn run_with_ctx(
     let mut stop = EarlyStop::new(cfg.patience);
     let mut stopped_early = false;
 
+    let threads = cfg.worker_threads();
+
     for round in 0..cfg.rounds {
         let mut shard_servers: Vec<Bundle> = Vec::with_capacity(cfg.shards);
         let mut all_clients: Vec<Bundle> = Vec::new();
         let mut shard_times: Vec<f64> = Vec::with_capacity(cfg.shards);
         let mut stats = StepStats::default();
 
-        for shard in 0..cfg.shards {
-            let members: Vec<&Node> =
-                shard_clients[shard].iter().map(|&id| &nodes[id]).collect();
-            let mut server_i = server_global.clone();
-            let mut client_models = vec![client_global.clone(); members.len()];
-            let mut t_shard = 0.0;
-            for _ in 0..cfg.inner_rounds {
-                let (new_server, st, t) =
-                    run_shard_round(ctx, &server_i, &mut client_models, &members)?;
-                server_i = new_server;
-                stats.merge(st);
-                t_shard += t;
-            }
-            shard_servers.push(server_i);
-            all_clients.extend(client_models);
-            shard_times.push(t_shard);
+        // Wall-clock parallel shard execution: each shard forks a
+        // private ShardCtx and trains against the shared PJRT runtime;
+        // results come back in shard-index order, so the merge below is
+        // bit-identical to a serial (threads = 1) execution.
+        let outcomes = {
+            let ctx_ref: &TrainCtx<'_> = ctx;
+            let server_ref = &server_global;
+            let client_ref = &client_global;
+            parallel_map((0..cfg.shards).collect(), threads, |shard| {
+                let members: Vec<&Node> =
+                    shard_clients[shard].iter().map(|&id| &nodes[id]).collect();
+                run_shard_cycle(ctx_ref, shard, server_ref, client_ref, &members)
+            })
+        };
+        for outcome in outcomes {
+            let out = outcome?;
+            ctx.traffic.merge(&out.traffic);
+            stats.merge(out.stats);
+            shard_servers.push(out.server);
+            all_clients.extend(out.clients);
+            shard_times.push(out.vtime_s);
         }
 
         // FL server aggregation across shards (Algorithm 1 lines 24-28).

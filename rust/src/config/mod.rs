@@ -103,6 +103,12 @@ pub struct ExpConfig {
     pub voting_attack: bool,
     pub election: Election,
     pub partition: Partition,
+    /// Wall-clock worker threads for shard execution in SSFL/BSFL
+    /// (0 = auto: `util::pool::default_threads()`).  Thread count never
+    /// changes numerics — shard results merge in shard-index order, so
+    /// `threads = 1` and `threads = N` are bit-identical (asserted by
+    /// `rust/tests/parallel_equivalence.rs`).
+    pub threads: usize,
     /// Early-stop patience in rounds (None = run all rounds).
     pub patience: Option<usize>,
     /// Directory of AOT artifacts.
@@ -136,6 +142,7 @@ impl Default for ExpConfig {
             // Partition::LabelShard for ablations (at 36 nodes it starves
             // whole classes once server nodes' data goes unused).
             partition: Partition::Dirichlet(0.5),
+            threads: 0,
             patience: None,
             artifacts_dir: PathBuf::from("artifacts"),
             data_dir: PathBuf::from("data/fashion-mnist"),
@@ -185,6 +192,15 @@ impl ExpConfig {
     /// nodes.
     pub fn flat_clients(&self) -> usize {
         self.nodes - 1
+    }
+
+    /// Resolved worker-thread count for shard execution (0 = auto).
+    pub fn worker_threads(&self) -> usize {
+        if self.threads == 0 {
+            crate::util::pool::default_threads()
+        } else {
+            self.threads
+        }
     }
 
     /// Validate cross-field invariants.
@@ -258,6 +274,7 @@ impl ExpConfig {
         self.val_per_node = a.get_usize("val-per-node", self.val_per_node).map_err(err)?;
         self.test_samples = a.get_usize("test-samples", self.test_samples).map_err(err)?;
         self.seed = a.get_u64("seed", self.seed).map_err(err)?;
+        self.threads = a.get_usize("threads", self.threads).map_err(err)?;
         self.attack_fraction = a
             .get_f64("attack-fraction", self.attack_fraction)
             .map_err(err)?;

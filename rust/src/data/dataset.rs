@@ -102,6 +102,27 @@ impl Dataset {
             pos: 0,
         }
     }
+
+    /// Fill `out` with the padded batch over rows `[start, start+take)`,
+    /// reusing its buffers.  This is the hot-path replacement for
+    /// `subset(&idx).batches(b).next()`: one write into the (recycled)
+    /// batch buffers instead of an index vector + row copy + batch copy.
+    /// Produces bytes identical to the iterator path for the same rows.
+    pub fn fill_batch(&self, start: usize, take: usize, batch: usize, out: &mut Batch) {
+        debug_assert!(take <= batch);
+        debug_assert!(start + take <= self.len());
+        out.x.resize(batch * PIXELS, 0.0);
+        out.y.resize(batch, 0);
+        out.w.resize(batch, 0.0);
+        out.x[..take * PIXELS]
+            .copy_from_slice(&self.images[start * PIXELS..(start + take) * PIXELS]);
+        out.x[take * PIXELS..].fill(0.0);
+        out.y[..take].copy_from_slice(&self.labels[start..start + take]);
+        out.y[take..].fill(0);
+        out.w[..take].fill(1.0);
+        out.w[take..].fill(0.0);
+        out.real = take;
+    }
 }
 
 /// One padded batch ready for the PJRT boundary.
@@ -115,6 +136,18 @@ pub struct Batch {
     pub w: Vec<f32>,
     /// Number of real rows.
     pub real: usize,
+}
+
+impl Batch {
+    /// Empty scratch batch for [`Dataset::fill_batch`] buffer reuse.
+    pub fn empty() -> Batch {
+        Batch {
+            x: Vec::new(),
+            y: Vec::new(),
+            w: Vec::new(),
+            real: 0,
+        }
+    }
 }
 
 /// Iterator over padded fixed-size batches.
@@ -173,6 +206,23 @@ mod tests {
         assert_eq!(batches[2].w, vec![1.0, 1.0, 0.0, 0.0]);
         // padded rows are zeros
         assert!(batches[2].x[2 * PIXELS..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn fill_batch_matches_subset_path() {
+        let ds = tiny(10);
+        let mut scratch = Batch::empty();
+        // full batch, then a padded tail, reusing the same scratch — must
+        // match the subset + iterator path byte for byte.
+        for (start, take, batch) in [(0usize, 4usize, 4usize), (8, 2, 4), (3, 3, 8)] {
+            ds.fill_batch(start, take, batch, &mut scratch);
+            let idx: Vec<usize> = (start..start + take).collect();
+            let want = ds.subset(&idx).batches(batch).next().unwrap();
+            assert_eq!(scratch.x, want.x);
+            assert_eq!(scratch.y, want.y);
+            assert_eq!(scratch.w, want.w);
+            assert_eq!(scratch.real, want.real);
+        }
     }
 
     #[test]

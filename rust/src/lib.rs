@@ -30,6 +30,29 @@
 //! * [`metrics`] — loss curves, timing, experiment output.
 //! * [`config`] — experiment configuration + paper presets.
 //! * [`exp`] — table/figure experiment drivers shared by CLI and benches.
+//!
+//! ## Threading model
+//!
+//! The SSFL/BSFL orchestrators run shards in **wall-clock parallel**
+//! (mirroring the virtual-time model the paper measures):
+//!
+//! * [`runtime::Runtime`] is `Send + Sync` — one shared PJRT CPU client,
+//!   executables called concurrently (the PJRT C API requires `Execute`
+//!   to be thread-safe; `SPLITFED_SERIAL_EXEC=1` serializes every
+//!   execution through one client-wide lock as an escape hatch).
+//!   Timing stats sit behind a `Mutex`.
+//! * Per-shard mutable state (traffic tally, a salted `seed ^ shard_id`
+//!   RNG stream, virtual-time clock) is forked into an
+//!   `algos::common::ShardCtx`, run through [`util::pool::parallel_map`]
+//!   (width = `ExpConfig::threads`, 0 = auto `cores - 2`), and merged
+//!   back in shard-index order.  That isolation + ordered merge is what
+//!   makes `threads = 1` and `threads = N` produce **bit-identical**
+//!   round records, model digests, and ledger hashes (asserted by
+//!   `rust/tests/parallel_equivalence.rs`).
+//! * The hot path avoids per-batch copies: executable outputs are moved
+//!   (never cloned) into weight bundles, argument vectors are allocated
+//!   once at final size, and dataset evaluation fills a reused scratch
+//!   batch from contiguous row ranges.
 
 pub mod aggregation;
 pub mod algos;

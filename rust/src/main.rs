@@ -28,6 +28,7 @@ USAGE:
                       [--rounds N] [--samples-per-node N] [--lr F]
                       [--attack-fraction F] [--voting-attack]
                       [--election score|random] [--seed N]
+                      [--threads N]  (shard worker threads; 0 = auto)
                       [--artifacts DIR] [--out DIR]
   splitfed experiment fig2|fig3|fig4|table3|ablation-committee|ablation-topk
                       [--scale smoke|small|paper] [--seed N]

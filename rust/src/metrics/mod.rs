@@ -37,6 +37,10 @@ pub struct RunResult {
     pub traffic: Traffic,
     /// Wall-clock seconds actually spent (compute, not virtual).
     pub wall_s: f64,
+    /// Hex SHA-256 fingerprint `client:server` of the final global
+    /// models — the serial/parallel equivalence tests compare these to
+    /// prove thread count does not change the numerics.
+    pub model_digest: String,
 }
 
 impl RunResult {
@@ -71,6 +75,7 @@ impl RunResult {
             ("avg_round_s", num(self.avg_round_s())),
             ("stopped_early", Json::Bool(self.stopped_early)),
             ("wall_s", num(self.wall_s)),
+            ("model_digest", s(&self.model_digest)),
             (
                 "traffic_bytes",
                 obj(vec![
@@ -185,6 +190,7 @@ mod tests {
             stopped_early: false,
             traffic: Traffic::new(),
             wall_s: 1.0,
+            model_digest: String::new(),
         }
     }
 

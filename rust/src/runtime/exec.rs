@@ -9,10 +9,24 @@
 //! Every execution is timed; [`Runtime::timing`] exposes cumulative
 //! per-entry stats, which both the netsim compute profile and the §Perf
 //! benchmarks consume.
+//!
+//! ## Thread safety
+//!
+//! `Runtime` is `Send + Sync` so the SSFL/BSFL orchestrators can drive
+//! shards through `util::pool::parallel_map` against one shared client.
+//! The PJRT C API requires `Execute` on a loaded executable to be
+//! callable concurrently from multiple threads (each execution owns its
+//! argument/result buffers), and the CPU plugin honors that; the timing
+//! store — the only interior mutability on this type — is behind a
+//! `Mutex`.  If a PJRT backend ever misbehaves under concurrent
+//! `execute`, set `SPLITFED_SERIAL_EXEC=1` to serialize **all**
+//! executions through one client-wide lock (concurrency bugs in a PJRT
+//! plugin are client-level, so the hatch must not let two different
+//! entry points overlap either).
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -64,8 +78,24 @@ impl EntryTiming {
 pub struct Runtime {
     manifest: Manifest,
     exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
-    timing: RefCell<BTreeMap<String, EntryTiming>>,
+    timing: Mutex<BTreeMap<String, EntryTiming>>,
+    /// `Some` when `SPLITFED_SERIAL_EXEC=1`: a client-wide lock taken
+    /// around every `execute` — PJRT misbehavior under concurrency is a
+    /// client-level property, so the escape hatch serializes across
+    /// entry points, not per-executable.
+    serial: Option<Mutex<()>>,
 }
+
+// SAFETY: the xla wrapper types hold raw pointers, so Send/Sync are not
+// auto-derived, but the PJRT C API contract makes them safe to share:
+// `PJRT_LoadedExecutable_Execute` must support concurrent callers (each
+// call owns its argument literals and result buffers), compilation is
+// done once in `load` before any sharing, and the client itself is
+// stateless across executions.  All Rust-side mutable state (`timing`)
+// is Mutex-guarded.  `SPLITFED_SERIAL_EXEC=1` remains as an escape
+// hatch that serializes every execution through one client-wide lock.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
 
 impl Runtime {
     /// Load the manifest from `dir`, compile all entries on a fresh CPU
@@ -95,10 +125,17 @@ impl Runtime {
             crate::debug!("compiled {name} in {:.2?}", t0.elapsed());
             exes.insert(name.clone(), exe);
         }
+        let serialize_exec = std::env::var("SPLITFED_SERIAL_EXEC")
+            .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+            .unwrap_or(false);
+        if serialize_exec {
+            crate::info!("SPLITFED_SERIAL_EXEC set: client-wide execution serialization on");
+        }
         Ok(Runtime {
             manifest,
             exes,
-            timing: RefCell::new(BTreeMap::new()),
+            timing: Mutex::new(BTreeMap::new()),
+            serial: serialize_exec.then(|| Mutex::new(())),
         })
     }
 
@@ -128,18 +165,24 @@ impl Runtime {
         }
 
         let t0 = Instant::now();
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("{entry}: execute failed: {e:?}"))?;
-        let root = result
-            .first()
-            .and_then(|d| d.first())
-            .ok_or_else(|| anyhow!("{entry}: empty result"))?
-            .to_literal_sync()
-            .map_err(|e| anyhow!("{entry}: to_literal: {e:?}"))?;
+        let root = {
+            let _serial = self
+                .serial
+                .as_ref()
+                .map(|m| m.lock().unwrap_or_else(|e| e.into_inner()));
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("{entry}: execute failed: {e:?}"))?;
+            result
+                .first()
+                .and_then(|d| d.first())
+                .ok_or_else(|| anyhow!("{entry}: empty result"))?
+                .to_literal_sync()
+                .map_err(|e| anyhow!("{entry}: to_literal: {e:?}"))?
+        };
         let elapsed = t0.elapsed().as_secs_f64();
         {
-            let mut tm = self.timing.borrow_mut();
+            let mut tm = self.timing.lock().unwrap_or_else(|e| e.into_inner());
             let e = tm.entry(entry.to_string()).or_default();
             e.calls += 1;
             e.total_s += elapsed;
@@ -166,12 +209,18 @@ impl Runtime {
 
     /// Cumulative per-entry timing (entry -> stats).
     pub fn timing(&self) -> BTreeMap<String, EntryTiming> {
-        self.timing.borrow().clone()
+        self.timing
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
     }
 
     /// Reset the timing accumulators (between §Perf bench phases).
     pub fn reset_timing(&self) {
-        self.timing.borrow_mut().clear();
+        self.timing
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clear();
     }
 }
 

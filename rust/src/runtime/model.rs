@@ -116,7 +116,8 @@ impl<'a> ModelOps<'a> {
 
     /// Client half forward: batch -> smashed activation A.
     pub fn client_forward(&self, client: &Bundle, batch: &Batch) -> Result<Tensor> {
-        let mut args: Vec<ArgValue> = bundle_args(client);
+        let mut args: Vec<ArgValue> = Vec::with_capacity(client.len() + 1);
+        bundle_args_into(&mut args, client);
         args.push(ArgValue::F32(&batch.x));
         let mut out = self.rt.execute("client_forward", &args)?;
         Ok(out.remove(0))
@@ -132,7 +133,8 @@ impl<'a> ModelOps<'a> {
         lr: f32,
     ) -> Result<(StepStats, Tensor)> {
         let lr_arr = [lr];
-        let mut args: Vec<ArgValue> = bundle_args(server);
+        let mut args: Vec<ArgValue> = Vec::with_capacity(server.len() + 4);
+        bundle_args_into(&mut args, server);
         args.push(ArgValue::F32(a.data()));
         args.push(ArgValue::I32(&batch.y));
         args.push(ArgValue::F32(&batch.w));
@@ -145,8 +147,7 @@ impl<'a> ModelOps<'a> {
             wsum: scalar(&mut it)?,
         };
         let da = it.next().ok_or_else(|| anyhow::anyhow!("missing dA"))?;
-        let new_tensors: Vec<Tensor> = it.collect();
-        replace_tensors(server, new_tensors)?;
+        replace_all(&mut [server], it.collect())?;
         Ok((stats, da))
     }
 
@@ -159,17 +160,22 @@ impl<'a> ModelOps<'a> {
         lr: f32,
     ) -> Result<()> {
         let lr_arr = [lr];
-        let mut args: Vec<ArgValue> = bundle_args(client);
+        let mut args: Vec<ArgValue> = Vec::with_capacity(client.len() + 3);
+        bundle_args_into(&mut args, client);
         args.push(ArgValue::F32(&batch.x));
         args.push(ArgValue::F32(da.data()));
         args.push(ArgValue::F32(&lr_arr));
         let out = self.rt.execute("client_backward", &args)?;
-        replace_tensors(client, out)?;
+        replace_all(&mut [client], out)?;
         Ok(())
     }
 
     /// Fused client+server step (identical numerics to the split path;
     /// used by the SL fast path and equivalence tests).
+    ///
+    /// Hot path: the output tensors are *moved* into the bundles
+    /// (previously each weight tensor was cloned per batch), and the arg
+    /// vector is allocated exactly once at its final size.
     pub fn full_train_step(
         &self,
         client: &mut Bundle,
@@ -178,8 +184,9 @@ impl<'a> ModelOps<'a> {
         lr: f32,
     ) -> Result<StepStats> {
         let lr_arr = [lr];
-        let mut args: Vec<ArgValue> = bundle_args(client);
-        args.extend(bundle_args(server));
+        let mut args: Vec<ArgValue> = Vec::with_capacity(client.len() + server.len() + 4);
+        bundle_args_into(&mut args, client);
+        bundle_args_into(&mut args, server);
         args.push(ArgValue::F32(&batch.x));
         args.push(ArgValue::I32(&batch.y));
         args.push(ArgValue::F32(&batch.w));
@@ -191,11 +198,7 @@ impl<'a> ModelOps<'a> {
             correct_sum: scalar(&mut it)?,
             wsum: scalar(&mut it)?,
         };
-        let rest: Vec<Tensor> = it.collect();
-        let nc = client.len();
-        let (c_new, s_new) = rest.split_at(nc);
-        replace_tensors(client, c_new.to_vec())?;
-        replace_tensors(server, s_new.to_vec())?;
+        replace_all(&mut [client, server], it.collect())?;
         Ok(stats)
     }
 
@@ -217,8 +220,9 @@ impl<'a> ModelOps<'a> {
         let mut correct_sum = 0.0;
         let mut wsum = 0.0;
         let mut run = |entry: &str, batch: &Batch| -> Result<()> {
-            let mut args: Vec<ArgValue> = bundle_args(client);
-            args.extend(bundle_args(server));
+            let mut args: Vec<ArgValue> = Vec::with_capacity(client.len() + server.len() + 3);
+            bundle_args_into(&mut args, client);
+            bundle_args_into(&mut args, server);
             args.push(ArgValue::F32(&batch.x));
             args.push(ArgValue::I32(&batch.y));
             args.push(ArgValue::F32(&batch.w));
@@ -230,6 +234,10 @@ impl<'a> ModelOps<'a> {
             Ok(())
         };
 
+        // One scratch batch reused across the whole sweep: each chunk is
+        // a contiguous row range filled in place (no index vector, no
+        // intermediate subset dataset, no fresh batch buffers).
+        let mut scratch = Batch::empty();
         let mut pos = 0usize;
         while pos < ds.len() {
             let remaining = ds.len() - pos;
@@ -238,10 +246,8 @@ impl<'a> ModelOps<'a> {
                 _ => ("evaluate", big),
             };
             let take = remaining.min(bsize);
-            let idx: Vec<usize> = (pos..pos + take).collect();
-            let chunk = ds.subset(&idx);
-            let batch = chunk.batches(bsize).next().expect("nonempty chunk");
-            run(entry, &batch)?;
+            ds.fill_batch(pos, take, bsize, &mut scratch);
+            run(entry, &scratch)?;
             pos += take;
         }
         Ok(EvalResult {
@@ -278,8 +284,12 @@ impl<'a> ModelOps<'a> {
     }
 }
 
-fn bundle_args(b: &Bundle) -> Vec<ArgValue<'_>> {
-    b.tensors().iter().map(|t| ArgValue::F32(t.data())).collect()
+/// Append one bundle's tensors as borrowed args (callers pre-size the
+/// vector once at its final length — no per-bundle temporaries).
+fn bundle_args_into<'b>(args: &mut Vec<ArgValue<'b>>, b: &'b Bundle) {
+    for t in b.tensors() {
+        args.push(ArgValue::F32(t.data()));
+    }
 }
 
 fn scalar(it: &mut impl Iterator<Item = Tensor>) -> Result<f64> {
@@ -290,15 +300,34 @@ fn scalar(it: &mut impl Iterator<Item = Tensor>) -> Result<f64> {
     Ok(t.data()[0] as f64)
 }
 
-fn replace_tensors(b: &mut Bundle, new: Vec<Tensor>) -> Result<()> {
-    if new.len() != b.len() {
-        bail!("{} new tensors for bundle of {}", new.len(), b.len());
+/// Move `new` into the bundles, in order.  Moves, never clones — the
+/// old tensor's buffer is dropped and the freshly unpacked one takes
+/// its place (copying outputs again per batch was the old hot-path
+/// cost; `new` itself only holds tensor handles, not payload copies).
+///
+/// Atomic on error: length and every shape are validated before any
+/// bundle is touched, so manifest/bundle drift can never leave a
+/// half-old/half-new weight set behind (callers today treat the error
+/// as fatal, but a future retry path must not train on mixed steps).
+fn replace_all(bundles: &mut [&mut Bundle], new: Vec<Tensor>) -> Result<()> {
+    let want: usize = bundles.iter().map(|b| b.len()).sum();
+    if new.len() != want {
+        bail!("{} new tensors for {} bundle slots", new.len(), want);
     }
-    for (old, new) in b.tensors_mut().iter_mut().zip(new.into_iter()) {
-        if old.shape() != new.shape() {
-            bail!("shape drift {:?} -> {:?}", old.shape(), new.shape());
+    let mut i = 0;
+    for b in bundles.iter() {
+        for old in b.tensors() {
+            if old.shape() != new[i].shape() {
+                bail!("shape drift {:?} -> {:?}", old.shape(), new[i].shape());
+            }
+            i += 1;
         }
-        *old = new;
+    }
+    let mut it = new.into_iter();
+    for b in bundles.iter_mut() {
+        for old in b.tensors_mut() {
+            *old = it.next().expect("validated length");
+        }
     }
     Ok(())
 }

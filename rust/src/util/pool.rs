@@ -3,9 +3,15 @@
 //!
 //! `parallel_map` fans a worklist out over up to `max_threads` OS threads
 //! using `std::thread::scope` (no 'static bound on the closure) and
-//! returns results in input order.  Used by the SSFL/BSFL orchestrators to
-//! run shards concurrently when wall-clock (not virtual-time) parallelism
-//! is wanted.
+//! returns results in input order.  The SSFL/BSFL orchestrators drive
+//! their shard-cycle and committee cross-evaluation loops through it
+//! (`algos::common::run_shard_cycle`), with `ExpConfig::worker_threads`
+//! choosing the width; results merge in input (shard-index) order so
+//! thread count never changes numerics.
+//!
+//! Panic behavior: a panicking worker is joined by `std::thread::scope`,
+//! which re-raises the panic on the calling thread — a shard failure
+//! aborts the round loudly instead of silently dropping its slot.
 
 /// Map `f` over `items` with up to `max_threads` worker threads,
 /// preserving input order in the result.
@@ -53,8 +59,15 @@ where
     slots.into_iter().map(|s| s.expect("worker panicked")).collect()
 }
 
-/// Number of worker threads to use by default (leave 2 cores for the OS
-/// and the PJRT intra-op pool).
+/// Number of worker threads to use by default: `cores - 2`, floor 1.
+///
+/// The two reserved cores cover the OS and the PJRT CPU client's
+/// intra-op thread pool: XLA CPU parallelizes *inside* an execution, so
+/// running `cores` coordinator threads each issuing `execute` would
+/// oversubscribe the machine and thrash both pools.  Leaving headroom
+/// keeps per-execution latency flat while shard-level parallelism
+/// supplies the wall-clock speedup.  Override per run with
+/// `ExpConfig::threads` / `--threads N` (0 = this default).
 pub fn default_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get().saturating_sub(2).max(1))
@@ -89,5 +102,47 @@ mod tests {
         let base = 10;
         let ys = parallel_map(vec![1, 2, 3, 4], 2, |x| x + base);
         assert_eq!(ys, vec![11, 12, 13, 14]);
+    }
+
+    #[test]
+    fn more_threads_than_items_clamps() {
+        // max_threads far above the item count must not spawn idle
+        // workers or scramble order.
+        let ys = parallel_map(vec![5, 6, 7], 64, |x| x * 10);
+        assert_eq!(ys, vec![50, 60, 70]);
+        let one = parallel_map(vec![9], usize::MAX, |x| x + 1);
+        assert_eq!(one, vec![10]);
+    }
+
+    #[test]
+    fn zero_threads_behaves_like_one() {
+        let ys = parallel_map(vec![1, 2, 3], 0, |x| x - 1);
+        assert_eq!(ys, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        let r = std::panic::catch_unwind(|| {
+            parallel_map((0..16).collect::<Vec<i32>>(), 4, |x| {
+                if x == 11 {
+                    panic!("boom in worker");
+                }
+                x
+            })
+        });
+        assert!(r.is_err(), "worker panic must reach the caller");
+    }
+
+    #[test]
+    fn serial_path_panic_propagates_too() {
+        let r = std::panic::catch_unwind(|| {
+            parallel_map(vec![1, 2, 3], 1, |x| {
+                if x == 2 {
+                    panic!("boom serial");
+                }
+                x
+            })
+        });
+        assert!(r.is_err());
     }
 }

@@ -1,0 +1,154 @@
+//! Serial/parallel equivalence: running SSFL and BSFL with `threads=1`
+//! and `threads=4` on the same seed must be **bit-identical** — round
+//! records, final model digests, traffic tallies, and (for BSFL) the
+//! ledger hash.  This is the contract that makes wall-clock shard
+//! parallelism safe to enable by default: thread count is a pure
+//! performance knob, never a numerics knob.
+//!
+//! Requires `make artifacts`; tests no-op otherwise (CI runs artifacts
+//! first).  Both runs share one fixed compute profile so virtual-time
+//! fields are comparable exactly.
+
+use std::path::PathBuf;
+
+use splitfed::algos::{self, common::TrainCtx};
+use splitfed::config::{Algo, ExpConfig};
+use splitfed::data::synthetic;
+use splitfed::metrics::RunResult;
+use splitfed::netsim::{ComputeProfile, MsgKind};
+use splitfed::runtime::{ModelOps, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("runtime load"))
+}
+
+/// 4 shards x 1 client (8 nodes) — the acceptance topology: enough
+/// shards that static chunking spreads work across several workers.
+fn four_shard_cfg(algo: Algo, threads: usize) -> ExpConfig {
+    let mut cfg = ExpConfig::paper_9(algo);
+    cfg.nodes = 8;
+    cfg.shards = 4;
+    cfg.clients_per_shard = 1;
+    cfg.k = 2;
+    cfg.rounds = 2;
+    cfg.samples_per_node = 48;
+    cfg.val_per_node = 24;
+    cfg.test_samples = 96;
+    cfg.threads = threads;
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn datasets(
+    cfg: &ExpConfig,
+) -> (
+    splitfed::data::Dataset,
+    splitfed::data::Dataset,
+    splitfed::data::Dataset,
+) {
+    let corpus = synthetic::generate(
+        cfg.nodes * (cfg.samples_per_node + cfg.val_per_node + 8),
+        cfg.seed,
+    );
+    let val = synthetic::generate(cfg.test_samples, cfg.seed ^ 1);
+    let test = synthetic::generate(cfg.test_samples, cfg.seed ^ 2);
+    (corpus, val, test)
+}
+
+/// Bitwise comparison of everything a run reports (floats compared with
+/// `==` on purpose: the claim is bit-identity, not tolerance).
+fn assert_runs_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{what}: record count");
+    for (x, y) in a.records.iter().zip(b.records.iter()) {
+        assert_eq!(x.round, y.round, "{what}: round index");
+        assert!(x.val_loss == y.val_loss, "{what}: val_loss {} != {}", x.val_loss, y.val_loss);
+        assert!(x.val_acc == y.val_acc, "{what}: val_acc");
+        assert!(x.train_loss == y.train_loss, "{what}: train_loss");
+        assert!(x.round_s == y.round_s, "{what}: round_s");
+        assert!(x.cum_s == y.cum_s, "{what}: cum_s");
+    }
+    assert!(a.test_loss == b.test_loss, "{what}: test_loss");
+    assert!(a.test_acc == b.test_acc, "{what}: test_acc");
+    assert_eq!(a.model_digest, b.model_digest, "{what}: final model digest");
+    assert!(!a.model_digest.is_empty(), "{what}: digest populated");
+    for kind in [
+        MsgKind::Activation,
+        MsgKind::Gradient,
+        MsgKind::ModelUpdate,
+        MsgKind::ChainTx,
+        MsgKind::Block,
+    ] {
+        assert_eq!(a.traffic.messages(kind), b.traffic.messages(kind), "{what}: {kind:?} msgs");
+        assert_eq!(a.traffic.bytes(kind), b.traffic.bytes(kind), "{what}: {kind:?} bytes");
+    }
+}
+
+#[test]
+fn ssfl_threads_do_not_change_numerics() {
+    let rt = match runtime() {
+        Some(rt) => rt,
+        None => return,
+    };
+    let ops = ModelOps::new(&rt);
+    let prof = ComputeProfile::synthetic_default();
+    let mut results = Vec::new();
+    for threads in [1usize, 4] {
+        let cfg = four_shard_cfg(Algo::Ssfl, threads);
+        let (corpus, val, test) = datasets(&cfg);
+        let mut ctx = TrainCtx::with_profile(&cfg, &ops, prof);
+        results.push(algos::ssfl::run_with_ctx(&mut ctx, &corpus, &val, &test).unwrap());
+    }
+    assert_runs_identical(&results[0], &results[1], "ssfl t1 vs t4");
+}
+
+#[test]
+fn bsfl_threads_do_not_change_numerics_or_ledger() {
+    let rt = match runtime() {
+        Some(rt) => rt,
+        None => return,
+    };
+    let ops = ModelOps::new(&rt);
+    let prof = ComputeProfile::synthetic_default();
+    let mut results = Vec::new();
+    let mut tips = Vec::new();
+    let mut winners = Vec::new();
+    for threads in [1usize, 4] {
+        let cfg = four_shard_cfg(Algo::Bsfl, threads);
+        let (corpus, val, test) = datasets(&cfg);
+        let mut ctx = TrainCtx::with_profile(&cfg, &ops, prof);
+        let (r, art) = algos::bsfl::run_with_ctx(&mut ctx, &corpus, &val, &test).unwrap();
+        art.chain.verify().unwrap();
+        tips.push((art.chain.len(), art.chain.tip_hash()));
+        winners.push(art.winners_per_cycle.clone());
+        results.push(r);
+    }
+    assert_runs_identical(&results[0], &results[1], "bsfl t1 vs t4");
+    assert_eq!(tips[0].0, tips[1].0, "ledger length");
+    assert_eq!(tips[0].1, tips[1].1, "ledger tip hash");
+    assert_eq!(winners[0], winners[1], "winner shards per cycle");
+}
+
+/// Oversubscription is safe: more threads than shards must clamp, not
+/// panic or scramble shard-index ordering.
+#[test]
+fn threads_beyond_shards_are_harmless() {
+    let rt = match runtime() {
+        Some(rt) => rt,
+        None => return,
+    };
+    let ops = ModelOps::new(&rt);
+    let prof = ComputeProfile::synthetic_default();
+    let mut results = Vec::new();
+    for threads in [1usize, 16] {
+        let cfg = four_shard_cfg(Algo::Ssfl, threads);
+        let (corpus, val, test) = datasets(&cfg);
+        let mut ctx = TrainCtx::with_profile(&cfg, &ops, prof);
+        results.push(algos::ssfl::run_with_ctx(&mut ctx, &corpus, &val, &test).unwrap());
+    }
+    assert_runs_identical(&results[0], &results[1], "ssfl t1 vs t16");
+}

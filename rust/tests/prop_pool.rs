@@ -1,0 +1,134 @@
+//! Properties of the parallelism substrates — no PJRT artifacts needed.
+//!
+//! * `parallel_map` is order-preserving and thread-count-invariant,
+//!   clamps oversubscription, and propagates worker panics.
+//! * Per-shard RNG streams (`algos::common::shard_rng`, a salted
+//!   `seed ^ shard_id`) never collide across shard ids, and never
+//!   replay the node-building stream `Rng::new(seed)` — so any future
+//!   per-shard stochastic choice stays deterministic regardless of
+//!   which worker thread runs which shard.
+
+use splitfed::algos::common::shard_rng;
+use splitfed::util::pool::parallel_map;
+use splitfed::util::quickcheck::{forall, forall_res};
+use splitfed::util::rng::Rng;
+
+#[test]
+fn parallel_map_matches_serial_map_for_any_width() {
+    forall_res(
+        0xF001_1234,
+        50,
+        |r| {
+            let n = r.below(40);
+            let items: Vec<u64> = (0..n).map(|_| r.next_u64() % 1000).collect();
+            let threads = 1 + r.below(12);
+            (items, threads)
+        },
+        |(items, threads)| {
+            let want: Vec<u64> = items.iter().map(|x| x * 3 + 1).collect();
+            let got = parallel_map(items.clone(), *threads, |x| x * 3 + 1);
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("threads={threads}: {got:?} != {want:?}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn parallel_map_clamps_oversubscription() {
+    // max_threads far beyond items.len() — including usize::MAX — must
+    // neither panic nor reorder.
+    for threads in [3usize, 7, 64, usize::MAX] {
+        let got = parallel_map(vec![1, 2, 3], threads, |x| x + 100);
+        assert_eq!(got, vec![101, 102, 103], "threads={threads}");
+    }
+    let empty: Vec<i32> = parallel_map(Vec::new(), usize::MAX, |x: i32| x);
+    assert!(empty.is_empty());
+}
+
+#[test]
+fn parallel_map_propagates_worker_panics() {
+    for threads in [1usize, 2, 8] {
+        let r = std::panic::catch_unwind(|| {
+            parallel_map((0..10).collect::<Vec<i32>>(), threads, |x| {
+                if x == 7 {
+                    panic!("worker died");
+                }
+                x
+            })
+        });
+        assert!(r.is_err(), "threads={threads}: panic must propagate");
+    }
+}
+
+#[test]
+fn shard_rng_streams_never_collide() {
+    // For random seeds and distinct shard ids up to well past any
+    // plausible shard count, the first 16 draws of the two streams must
+    // differ somewhere.
+    forall_res(
+        0x5EED_0001,
+        300,
+        |r| {
+            let seed = r.next_u64();
+            let a = r.below(4096);
+            let mut b = r.below(4096);
+            if b == a {
+                b = (b + 1) % 4096;
+            }
+            (seed, a, b)
+        },
+        |&(seed, a, b)| {
+            let mut ra = shard_rng(seed, a);
+            let mut rb = shard_rng(seed, b);
+            let same = (0..16).all(|_| ra.next_u64() == rb.next_u64());
+            if same {
+                Err(format!("streams collide: seed={seed:#x} shards {a} vs {b}"))
+            } else {
+                Ok(())
+            }
+        },
+    );
+}
+
+#[test]
+fn shard_rng_is_stable_per_shard() {
+    // The stream depends only on (seed, shard_id) — replaying it gives
+    // the same draws, which is what makes thread scheduling irrelevant.
+    forall(
+        0x5EED_0002,
+        100,
+        |r| (r.next_u64(), r.below(1024)),
+        |&(seed, shard)| {
+            let mut x = shard_rng(seed, shard);
+            let mut y = shard_rng(seed, shard);
+            (0..8).all(|_| x.next_u64() == y.next_u64())
+        },
+    );
+}
+
+#[test]
+fn shard_streams_are_disjoint_from_node_building_stream() {
+    // make_nodes/attack_plan consume Rng::new(seed) directly; the shard
+    // streams are salted so no shard — in particular shard 0 — replays
+    // those draws.
+    forall_res(
+        0x5EED_0003,
+        200,
+        |r| (r.next_u64(), r.below(1024)),
+        |&(seed, shard)| {
+            let mut a = shard_rng(seed, shard);
+            let mut b = Rng::new(seed);
+            let same = (0..16).all(|_| a.next_u64() == b.next_u64());
+            if same {
+                Err(format!(
+                    "shard {shard} stream replays Rng::new({seed:#x})"
+                ))
+            } else {
+                Ok(())
+            }
+        },
+    );
+}

@@ -1,0 +1,40 @@
+#!/usr/bin/env bash
+# CI gate for the splitfed crate: build, test, lint, and a bench smoke
+# pass that records the serial-vs-parallel round-time JSON used to track
+# the perf trajectory across PRs (results/bench/runtime_exec/).
+#
+# Usage: scripts/ci.sh [--no-bench]
+#
+# The bench phase needs the AOT artifacts (make artifacts / python
+# python/compile/aot.py); it is skipped with a notice when they are
+# absent so the build+test+lint gate still runs on artifact-less runners.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+NO_BENCH=0
+[ "${1:-}" = "--no-bench" ] && NO_BENCH=1
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo clippy -- -D warnings"
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy -- -D warnings
+else
+    echo "    clippy not installed; skipping lint"
+fi
+
+if [ "$NO_BENCH" = "1" ]; then
+    echo "==> bench smoke skipped (--no-bench)"
+elif [ ! -f artifacts/manifest.json ]; then
+    echo "==> bench smoke skipped (artifacts/ not built; run 'make artifacts')"
+else
+    echo "==> bench smoke (SPLITFED_BENCH_SCALE=smoke runtime_exec)"
+    SPLITFED_BENCH_SCALE=smoke cargo bench --bench runtime_exec
+    echo "    perf record: results/bench/runtime_exec/roundtime.json"
+fi
+
+echo "==> CI OK"
