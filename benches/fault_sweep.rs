@@ -1,0 +1,38 @@
+//! FAULT SWEEP — SSFL/BSFL robustness under injected failures.
+//!
+//! Sweeps dropout {0%, 10%, 20%, 40%}, the top tier adding stragglers,
+//! message loss, a mid-run shard-server crash, and (BSFL) a committee
+//! crash.  The run must complete every round via quorum aggregation,
+//! shard failover, and on-chain view-change; the table reports how much
+//! test loss the failures cost and how the fault counters add up.
+
+mod bench_common;
+
+fn main() -> anyhow::Result<()> {
+    let h = bench_common::harness("fault_sweep")?;
+    let results =
+        splitfed::exp::fault_sweep(&h, bench_common::scale(), bench_common::seed())?;
+    splitfed::exp::save_all(&h, "fault_sweep", &results)?;
+
+    // shape check: the protocol must stay close to the fault-free loss
+    // under 20% dropout (quorum aggregation over survivors).
+    let loss = |label_frag: &str| {
+        results
+            .iter()
+            .find(|r| r.label.contains(label_frag))
+            .map(|r| r.test_loss)
+            .unwrap_or(f64::NAN)
+    };
+    println!("\nshape checks:");
+    for algo in ["ssfl", "bsfl"] {
+        let clean = loss(&format!("fault_{algo}_drop_0"));
+        let dropped = loss(&format!("fault_{algo}_drop_20"));
+        println!(
+            "  {algo} 20% dropout loss {:.3} vs clean {:.3}: {}",
+            dropped,
+            clean,
+            if dropped < 2.0 * clean.max(0.05) { "OK" } else { "DEGRADED" }
+        );
+    }
+    Ok(())
+}

@@ -46,6 +46,33 @@ pub fn fedavg_weighted(bundles: &[&Bundle], weights: &[f64]) -> Result<Bundle> {
     Ok(acc)
 }
 
+/// Quorum-based partial FedAvg (fault tolerance): average only the
+/// bundles whose client actually reported this round.  With every flag
+/// set the result is **bit-identical** to [`fedavg`] over all bundles
+/// (same op order), which is what keeps fault-free runs unchanged.
+pub fn participant_fedavg(bundles: &[&Bundle], participating: &[bool]) -> Result<Bundle> {
+    if bundles.len() != participating.len() {
+        bail!(
+            "participant_fedavg: {} bundles vs {} flags",
+            bundles.len(),
+            participating.len()
+        );
+    }
+    if participating.iter().all(|&p| p) {
+        return fedavg(bundles);
+    }
+    let picked: Vec<&Bundle> = bundles
+        .iter()
+        .zip(participating.iter())
+        .filter(|(_, &p)| p)
+        .map(|(&b, _)| b)
+        .collect();
+    if picked.is_empty() {
+        bail!("participant_fedavg: no participants survived the round");
+    }
+    fedavg(&picked)
+}
+
 /// BSFL top-K aggregation: mean of the winner subset only.
 pub fn topk_mean(bundles: &[&Bundle], winners: &[usize]) -> Result<Bundle> {
     if winners.is_empty() {
@@ -110,6 +137,24 @@ mod tests {
         assert_eq!(m.tensors()[0].data(), &[2.0]);
         assert!(topk_mean(&[&a], &[5]).is_err());
         assert!(topk_mean(&[&a], &[]).is_err());
+    }
+
+    #[test]
+    fn participant_fedavg_filters_and_matches_full() {
+        let a = bundle(&[1.0, 2.0]);
+        let b = bundle(&[3.0, 6.0]);
+        let c = bundle(&[5.0, 10.0]);
+        // all participate -> bit-identical to plain fedavg
+        let full = fedavg(&[&a, &b, &c]).unwrap();
+        let part = participant_fedavg(&[&a, &b, &c], &[true, true, true]).unwrap();
+        assert_eq!(&full, &part);
+        // one dropped -> mean over survivors
+        let m = participant_fedavg(&[&a, &b, &c], &[true, false, true]).unwrap();
+        assert_eq!(m.tensors()[0].data(), &[3.0, 6.0]);
+        // nobody reported
+        assert!(participant_fedavg(&[&a], &[false]).is_err());
+        // length mismatch
+        assert!(participant_fedavg(&[&a, &b], &[true]).is_err());
     }
 
     #[test]

@@ -13,17 +13,37 @@
 //! poorly on honest validators' data and never enter the aggregation —
 //! this is the whole defense, and the reason the paper's Table III shows
 //! BSFL flat under attack while SL/SFL/SSFL collapse.
+//!
+//! # Fault tolerance
+//!
+//! Crash-stop failures degrade a cycle instead of killing the run:
+//!
+//! * A **shard-server crash** (`--fault-shard-crash`) marks the elected
+//!   member dead before training; its shard sits the cycle out and the
+//!   next election re-deals its clients (dead nodes are barred from
+//!   seats via [`AssignNodes::execute_excluding`]).
+//! * A **committee-member crash** after proposal but before evaluation
+//!   triggers an on-chain **view-change**: the best-scoring live client
+//!   of that shard is promoted to judge for the rest of the cycle
+//!   ([`ViewChange`] transaction).
+//! * Shards that miss quorum (or crashed) post nothing; the partial
+//!   tally scores them `inf` and top-K selection skips them.
+//!
+//! With faults disabled every branch below reduces to the fault-free
+//! path bit-for-bit (same rng draws, same ledger bytes, same floats).
 
 use anyhow::Result;
 
-use crate::aggregation::{fedavg, topk_mean};
+use crate::aggregation::fedavg;
 use crate::attack::invert_scores;
 use crate::blockchain::{
-    select_top_k, AssignNodes, Chain, EvaluationPropose, ModelPropose, ModelStore,
-    Transaction,
+    committee::Assignment, select_top_k, AssignNodes, Chain, EvaluationPropose,
+    ModelPropose, ModelStore, Transaction, ViewChange,
 };
 use crate::config::{Election, ExpConfig};
 use crate::data::Dataset;
+use crate::error::SplitFedError;
+use crate::fault::RoundFaults;
 use crate::metrics::RunResult;
 use crate::netsim::{self, MsgKind};
 use crate::nodes::Node;
@@ -70,6 +90,9 @@ pub fn run_with_ctx(
     let nodes = make_nodes(cfg, corpus);
     let mut chain = Chain::new();
     let mut store = ModelStore::new();
+    // Cloned so the plan can be consulted while `ctx` is mutably borrowed
+    // (the plan is immutable after generation).
+    let plan = ctx.fault.clone();
 
     let (mut client_global, mut server_global) = ctx.ops.init_models()?;
     // The paper initializes the globals ON the blockchain (§V): their
@@ -93,16 +116,21 @@ pub fn run_with_ctx(
     let mut stopped_early = false;
     let mut node_scores = vec![f64::INFINITY; cfg.nodes];
     let mut prev_committee: Vec<usize> = Vec::new();
+    // Crash-stop liveness: once dead, a node never seats again and trains
+    // no further batches (elections still deal it as an idle client so
+    // the assignment stays a partition).
+    let mut dead = vec![false; cfg.nodes];
     let mut winners_per_cycle = Vec::new();
     let mut committees = Vec::new();
     let mut assignments = Vec::new();
 
     for cycle in 0..cfg.rounds {
         let blocks_before = chain.len();
+        let mut faults = RoundFaults::default();
 
         // ---- AssignNodes -------------------------------------------------
         let random = cycle == 0 || cfg.election == Election::Random;
-        let assignment = AssignNodes::execute(
+        let assignment = AssignNodes::execute_excluding(
             &mut chain,
             vtime,
             cycle,
@@ -111,58 +139,110 @@ pub fn run_with_ctx(
             cfg.clients_per_shard,
             &prev_committee,
             &node_scores,
+            &dead,
             random,
             &mut ctx.rng,
         )?;
         committees.push(assignment.committee.clone());
         assignments.push(assignment.clone());
 
+        // ---- shard-server crash (before training) --------------------------
+        // The freshly seated member of the configured shard dies; its
+        // shard sits this cycle out and the next election re-deals its
+        // clients across the survivors.
+        if let Some(cs) = plan.shard_crash(cycle) {
+            if cs < cfg.shards && !dead[assignment.committee[cs]] {
+                dead[assignment.committee[cs]] = true;
+                faults.failovers += assignment.clients[cs].len();
+                crate::info!(
+                    "cycle {cycle}: shard {cs} server (node {}) crashed; {} clients idle until re-election",
+                    assignment.committee[cs],
+                    assignment.clients[cs].len()
+                );
+            }
+        }
+        let alive: Vec<bool> = (0..cfg.shards)
+            .map(|s| !dead[assignment.committee[s]])
+            .collect();
+        let alive_ids: Vec<usize> = (0..cfg.shards).filter(|&s| alive[s]).collect();
+
         // ---- shard training (parallel in virtual time AND wall-clock) ------
         // Shards fan out over the worker pool; per-shard state lives in a
         // forked ShardCtx, and results merge back in shard-index order so
         // the ledger and loss curves are bit-identical at any `threads`.
-        let mut shard_servers: Vec<Bundle> = Vec::with_capacity(cfg.shards);
-        let mut shard_client_models: Vec<Vec<Bundle>> = Vec::with_capacity(cfg.shards);
-        let mut shard_times = Vec::with_capacity(cfg.shards);
+        let mut shard_servers: Vec<Option<Bundle>> =
+            (0..cfg.shards).map(|_| None).collect();
+        let mut shard_client_models: Vec<Vec<Bundle>> =
+            (0..cfg.shards).map(|_| Vec::new()).collect();
+        let mut shard_participated: Vec<Vec<bool>> =
+            (0..cfg.shards).map(|_| Vec::new()).collect();
+        let mut shard_quorum = vec![false; cfg.shards];
+        let mut shard_times = Vec::with_capacity(alive_ids.len());
         let mut stats = StepStats::default();
         let outcomes = {
             let ctx_ref: &TrainCtx<'_> = ctx;
             let server_ref = &server_global;
             let client_ref = &client_global;
             let assignment_ref = &assignment;
-            parallel_map((0..cfg.shards).collect(), threads, |shard| {
+            let dead_ref: &[bool] = &dead;
+            parallel_map(alive_ids.clone(), threads, |shard| {
                 let members: Vec<&Node> = assignment_ref.clients[shard]
                     .iter()
                     .map(|&id| &nodes[id])
                     .collect();
-                run_shard_cycle(ctx_ref, shard, server_ref, client_ref, &members)
+                run_shard_cycle(
+                    ctx_ref, shard, cycle, server_ref, client_ref, &members, dead_ref,
+                )
             })
         };
-        for outcome in outcomes {
+        for (&shard, outcome) in alive_ids.iter().zip(outcomes) {
             let out = outcome?;
             ctx.traffic.merge(&out.traffic);
             stats.merge(out.stats);
-            shard_servers.push(out.server);
-            shard_client_models.push(out.clients);
+            faults.merge(&out.faults);
+            shard_servers[shard] = Some(out.server);
+            shard_client_models[shard] = out.clients;
+            shard_participated[shard] = out.participated;
+            shard_quorum[shard] = out.quorum_met;
             shard_times.push(out.vtime_s);
         }
         let train_s = netsim::parallel(&shard_times);
 
+        // Shards that reach the ledger this cycle: alive AND met quorum.
+        let scored: Vec<bool> = (0..cfg.shards)
+            .map(|s| alive[s] && shard_quorum[s])
+            .collect();
+        let n_scored = scored.iter().filter(|&&s| s).count();
+        if n_scored == 0 {
+            return Err(SplitFedError::Fault(format!(
+                "cycle {cycle}: no shard met quorum — nothing to aggregate"
+            ))
+            .into());
+        }
+
         // ---- ModelPropose --------------------------------------------------
         // model uploads to the ledger's store cross org boundaries (WAN);
         // shards upload in parallel, clients within a shard serially
-        // through their server's link.
+        // through their server's link.  Only surviving (quorum-met)
+        // shards propose; only participating members' models ride.
         let mut propose_s: f64 = 0.0;
         for shard in 0..cfg.shards {
+            let sm = match &shard_servers[shard] {
+                Some(m) if scored[shard] => m,
+                _ => continue,
+            };
             let server_node = assignment.committee[shard];
-            let d = store.put(shard_servers[shard].clone());
-            let bytes = shard_servers[shard].wire_bytes();
+            let d = store.put(sm.clone());
+            let bytes = sm.wire_bytes();
             ModelPropose::propose_server(
                 &mut chain, &store, vtime, cycle, shard, server_node, d, bytes,
             )?;
             ctx.traffic.record(MsgKind::ChainTx, bytes);
             let mut t_shard_up = ctx.wan.transfer_s(bytes);
             for (slot, cm) in shard_client_models[shard].iter().enumerate() {
+                if !shard_participated[shard][slot] {
+                    continue;
+                }
                 let client_node = assignment.clients[shard][slot];
                 let dc = store.put(cm.clone());
                 ModelPropose::propose_client(
@@ -181,14 +261,80 @@ pub fn run_with_ctx(
             propose_s = propose_s.max(t_shard_up);
         }
 
-        // each committee member pulls every other shard's models
-        let per_shard_bytes = shard_servers[0].wire_bytes()
-            + shard_client_models[0]
+        // each committee member pulls every other proposing shard's models
+        let first_scored = (0..cfg.shards)
+            .find(|&s| scored[s])
+            .expect("n_scored > 0 checked above");
+        let per_shard_bytes = shard_servers[first_scored]
+            .as_ref()
+            .map(|m| m.wire_bytes())
+            .unwrap_or(0)
+            + shard_client_models[first_scored]
                 .iter()
-                .map(|c| c.wire_bytes())
+                .zip(shard_participated[first_scored].iter())
+                .filter(|&(_, &p)| p)
+                .map(|(c, _)| c.wire_bytes())
                 .sum::<usize>();
-        let pull_bytes = (cfg.shards - 1) * per_shard_bytes;
-        for _ in 0..cfg.shards {
+        let pull_bytes = n_scored.saturating_sub(1) * per_shard_bytes;
+
+        // ---- committee-member crash / view-change ---------------------------
+        // After proposal, before evaluation: the configured slot's judge
+        // dies; the best-scoring live client of that shard is promoted
+        // (recorded on-chain) and evaluates in its place.
+        let mut acting: Vec<Option<usize>> = (0..cfg.shards)
+            .map(|s| {
+                if alive[s] {
+                    Some(assignment.committee[s])
+                } else {
+                    None
+                }
+            })
+            .collect();
+        if let Some(slot) = plan.committee_crash(cycle) {
+            if slot < cfg.shards && alive[slot] && !dead[assignment.committee[slot]] {
+                let crashed = assignment.committee[slot];
+                dead[crashed] = true;
+                let mut candidates: Vec<usize> = assignment.clients[slot]
+                    .iter()
+                    .copied()
+                    .filter(|&c| !dead[c])
+                    .collect();
+                candidates.sort_by(|&a, &b| {
+                    node_scores[a].total_cmp(&node_scores[b]).then(a.cmp(&b))
+                });
+                match candidates.first().copied() {
+                    Some(rep) => {
+                        ViewChange::execute(
+                            &mut chain, vtime, cycle, &assignment, slot, crashed, rep,
+                        )?;
+                        ctx.traffic.record(MsgKind::ChainTx, 64);
+                        acting[slot] = Some(rep);
+                        faults.view_changes += 1;
+                        crate::info!(
+                            "cycle {cycle}: committee member {crashed} (shard {slot}) crashed; view-change to node {rep}"
+                        );
+                    }
+                    None => {
+                        acting[slot] = None;
+                        crate::warn_!(
+                            "cycle {cycle}: committee member {crashed} (shard {slot}) crashed with no live replacement"
+                        );
+                    }
+                }
+            }
+        }
+        // The assignment the scoring contract validates against: the
+        // original committee with any view-changed seat swapped in.
+        let acting_assignment = Assignment {
+            committee: (0..cfg.shards)
+                .map(|s| acting[s].unwrap_or(assignment.committee[s]))
+                .collect(),
+            clients: assignment.clients.clone(),
+        };
+        let judges: Vec<(usize, usize)> = (0..cfg.shards)
+            .filter_map(|s| acting[s].map(|m| (s, m)))
+            .collect();
+        for _ in &judges {
             ctx.traffic.record(MsgKind::ChainTx, pull_bytes);
         }
         let distribute_s = ctx.wan.transfer_s(pull_bytes); // parallel pulls
@@ -202,69 +348,116 @@ pub fn run_with_ctx(
             let ops = ctx.ops;
             let shard_servers_ref = &shard_servers;
             let shard_client_models_ref = &shard_client_models;
+            let shard_participated_ref = &shard_participated;
+            let scored_ref = &scored;
             let nodes_ref = &nodes;
-            let work: Vec<(usize, usize)> = assignment
-                .committee
-                .iter()
-                .enumerate()
-                .map(|(m_shard, &member)| (m_shard, member))
-                .collect();
             type MemberScores = (usize, Vec<(usize, f64)>, Vec<f64>);
-            parallel_map(work, threads, |(m_shard, member)| -> Result<MemberScores> {
-                let judge = &nodes_ref[member];
-                let mut judged: Vec<(usize, f64)> = Vec::new();
-                for shard in 0..cfg.shards {
-                    if shard == m_shard {
-                        continue;
+            parallel_map(
+                judges.clone(),
+                threads,
+                |(m_shard, member)| -> Result<MemberScores> {
+                    let judge = &nodes_ref[member];
+                    let mut judged: Vec<(usize, f64)> = Vec::new();
+                    for shard in 0..cfg.shards {
+                        if shard == m_shard || !scored_ref[shard] {
+                            continue;
+                        }
+                        let sm = match &shard_servers_ref[shard] {
+                            Some(m) => m,
+                            None => continue,
+                        };
+                        let mut losses: Vec<f64> = Vec::new();
+                        for (cm, &p) in shard_client_models_ref[shard]
+                            .iter()
+                            .zip(shard_participated_ref[shard].iter())
+                        {
+                            if !p {
+                                continue;
+                            }
+                            let ev = ops.evaluate(cm, sm, &judge.val)?;
+                            losses.push(ev.loss);
+                        }
+                        if !losses.is_empty() {
+                            judged.push((shard, crate::blockchain::median(&losses)));
+                        }
                     }
-                    let mut losses: Vec<f64> = Vec::new();
-                    for cm in &shard_client_models_ref[shard] {
-                        let ev = ops.evaluate(cm, &shard_servers_ref[shard], &judge.val)?;
-                        losses.push(ev.loss);
-                    }
-                    judged.push((shard, crate::blockchain::median(&losses)));
-                }
-                let values: Vec<f64> = judged.iter().map(|&(_, v)| v).collect();
-                let reported = if judge.malicious && cfg.voting_attack {
-                    invert_scores(&values)
-                } else {
-                    values
-                };
-                Ok((member, judged, reported))
-            })
+                    let values: Vec<f64> = judged.iter().map(|&(_, v)| v).collect();
+                    let reported = if judge.malicious && cfg.voting_attack {
+                        invert_scores(&values)
+                    } else {
+                        values
+                    };
+                    Ok((member, judged, reported))
+                },
+            )
         };
         for res in member_scores {
             let (member, judged, reported) = res?;
             for ((shard, _), value) in judged.iter().zip(reported.iter()) {
                 EvaluationPropose::post_score(
-                    &mut chain, vtime, cycle, &assignment, member, *shard, *value,
+                    &mut chain,
+                    vtime,
+                    cycle,
+                    &acting_assignment,
+                    member,
+                    *shard,
+                    *value,
                 )?;
                 ctx.traffic.record(MsgKind::ChainTx, 64);
             }
         }
-        // members evaluate concurrently: (I-1)*J evaluate() calls each
-        let evals_per_member = (cfg.shards - 1) * cfg.clients_per_shard;
-        let eval_batches = nodes[assignment.committee[0]]
-            .val
-            .len()
-            .div_ceil(ctx.ops.eval_batch_size())
-            .max(1);
-        let eval_s =
-            evals_per_member as f64 * eval_batches as f64 * ctx.sim.prof.eval_batch_s;
+        // members evaluate concurrently: up to (I_scored - 1)*J
+        // evaluate() calls each (exactly (I-1)*J fault-free)
+        let eval_s = match judges.first() {
+            Some(&(_, first_judge)) => {
+                let evals_per_member =
+                    n_scored.saturating_sub(1) * cfg.clients_per_shard;
+                let eval_batches = nodes[first_judge]
+                    .val
+                    .len()
+                    .div_ceil(ctx.ops.eval_batch_size())
+                    .max(1);
+                evals_per_member as f64 * eval_batches as f64 * ctx.sim.prof.eval_batch_s
+            }
+            None => 0.0,
+        };
 
         // ---- EvaluationPropose / top-K aggregation ---------------------------
-        let finals = EvaluationPropose::tally(&chain, cycle, cfg.shards)?;
-        let winners = select_top_k(&finals, cfg.k);
-        let s_refs: Vec<&Bundle> = shard_servers.iter().collect();
-        server_global = topk_mean(&s_refs, &winners)?;
+        // Partial tally: unscored shards (crashed / below quorum / no
+        // judge reached them) carry `inf` and never win.  Fault-free this
+        // is exactly the strict tally.
+        let finals = EvaluationPropose::tally_partial(&chain, cycle, cfg.shards)?;
+        let winners: Vec<usize> = select_top_k(&finals, cfg.k)
+            .into_iter()
+            .filter(|&w| finals[w].is_finite())
+            .collect();
+        if winners.is_empty() {
+            return Err(SplitFedError::Fault(format!(
+                "cycle {cycle}: no scored shard available for aggregation"
+            ))
+            .into());
+        }
+        let s_refs: Vec<&Bundle> = winners
+            .iter()
+            .filter_map(|&w| shard_servers[w].as_ref())
+            .collect();
+        server_global = fedavg(&s_refs)?;
         let winner_clients: Vec<&Bundle> = winners
             .iter()
-            .flat_map(|&w| shard_client_models[w].iter())
+            .flat_map(|&w| {
+                shard_client_models[w]
+                    .iter()
+                    .zip(shard_participated[w].iter())
+                    .filter(|&(_, &p)| p)
+                    .map(|(c, _)| c)
+            })
             .collect();
-        client_global = fedavg(&winner_clients)?;
+        if !winner_clients.is_empty() {
+            client_global = fedavg(&winner_clients)?;
+        }
         let d_server = store.put(server_global.clone());
         let d_client = store.put(client_global.clone());
-        let (w_chain, finals_chain) = EvaluationPropose::finalize(
+        let (w_chain, finals_chain) = EvaluationPropose::finalize_partial(
             &mut chain, vtime, cycle, cfg.shards, cfg.k, d_server, d_client,
         )?;
         debug_assert_eq!(w_chain, winners);
@@ -282,7 +475,12 @@ pub fn run_with_ctx(
         }
 
         // ---- bookkeeping -------------------------------------------------------
+        // Unscored shards keep their previous node scores (inf would
+        // poison the next election's similar-efficiency grouping).
         for (shard, &score) in finals.iter().enumerate() {
+            if !score.is_finite() {
+                continue;
+            }
             node_scores[assignment.committee[shard]] = score;
             for &c in &assignment.clients[shard] {
                 node_scores[c] = score;
@@ -302,6 +500,7 @@ pub fn run_with_ctx(
             valset,
             round_s,
             &stats,
+            &faults,
         )?;
         if stop.update(val_loss) {
             stopped_early = true;

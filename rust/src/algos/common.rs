@@ -29,8 +29,11 @@ use anyhow::Result;
 use crate::attack::AttackPlan;
 use crate::config::ExpConfig;
 use crate::data::Dataset;
+use crate::fault::{FaultPlan, RoundFaults};
 use crate::metrics::{RoundRecord, RunResult};
-use crate::netsim::{ComputeProfile, LinkModel, MsgKind, ShardSim, Traffic};
+use crate::netsim::{
+    retry_backoff_s, ClientLoad, ComputeProfile, LinkModel, MsgKind, ShardSim, Traffic,
+};
 use crate::nodes::{build_nodes, Node};
 use crate::runtime::{ModelOps, StepStats};
 use crate::tensor::Bundle;
@@ -48,6 +51,10 @@ pub struct TrainCtx<'a> {
     pub wan: LinkModel,
     pub traffic: Traffic,
     pub rng: Rng,
+    /// The run's precomputed failure schedule (inactive by default; see
+    /// `crate::fault`).  Drawn from its own RNG stream, so enabling it
+    /// never perturbs node partitioning or training draws.
+    pub fault: FaultPlan,
     t_start: Instant,
 }
 
@@ -124,6 +131,7 @@ impl<'a> TrainCtx<'a> {
             wan: LinkModel::wan(),
             traffic: Traffic::new(),
             rng: Rng::new(cfg.seed ^ 0xA160_0000),
+            fault: FaultPlan::generate(&cfg.fault, cfg.seed, cfg.rounds, cfg.nodes),
             t_start: Instant::now(),
         }
     }
@@ -234,14 +242,101 @@ pub fn run_shard_round(
 }
 
 /// Output of one shard's full cycle ([`run_shard_cycle`]): the trained
-/// shard-server model, the shard's client models in member order, the
-/// summed step stats, the shard's virtual time, and its private traffic.
+/// shard-server model, the shard's client models in member order, which
+/// members' updates the round accepted, the quorum verdict, the shard's
+/// fault counters, the summed step stats, virtual time, and traffic.
 pub struct ShardCycleOut {
     pub server: Bundle,
     pub clients: Vec<Bundle>,
+    /// Per-member-slot: this member's update was trained *and* accepted.
+    /// All-true on fault-free runs; forced all-false when the quorum was
+    /// missed (the shard kept its previous models).
+    pub participated: Vec<bool>,
+    /// At least `quorum_frac` of the shard's members reported.
+    pub quorum_met: bool,
+    pub faults: RoundFaults,
     pub stats: StepStats,
     pub vtime_s: f64,
     pub traffic: Traffic,
+}
+
+/// Classify each member of a shard round under the fault plan: dead or
+/// effectively-dropped members are out; surviving members' lost report
+/// attempts are tallied as retries and charged as `Retransmit` traffic
+/// (givers-up are charged their exhausted retries too).
+fn classify_members(
+    s: &mut ShardCtx<'_>,
+    plan: &FaultPlan,
+    round: usize,
+    members: &[&Node],
+    dead: &[bool],
+) -> (Vec<bool>, RoundFaults) {
+    let mut faults = RoundFaults::default();
+    let mut participated = Vec::with_capacity(members.len());
+    for node in members {
+        let node_dead = dead.get(node.id).copied().unwrap_or(false);
+        let p = !node_dead && !plan.effectively_dropped(round, node.id);
+        participated.push(p);
+        let retries = if p {
+            faults.participants += 1;
+            plan.lost_attempts(round, node.id)
+        } else {
+            faults.dropped += 1;
+            if !node_dead
+                && plan.lost_to_timeout(round, node.id)
+                && !plan.is_dropped(round, node.id)
+            {
+                plan.config().max_retries
+            } else {
+                0
+            }
+        };
+        faults.retries += retries;
+        for _ in 0..retries {
+            s.traffic.record(MsgKind::Retransmit, s.sim.act_bytes);
+        }
+    }
+    (participated, faults)
+}
+
+/// Build the [`ClientLoad`]s of one faulty shard round: offline members
+/// contribute nothing; timed-out members (and everyone, when the round
+/// was skipped below quorum) hold the round open for their backoff
+/// window without occupying the server; survivors carry their batches,
+/// straggler slowdown, and retry backoff.
+fn fault_loads(
+    s: &ShardCtx<'_>,
+    plan: &FaultPlan,
+    round: usize,
+    members: &[&Node],
+    participated: &[bool],
+    dead: &[bool],
+    trained: bool,
+) -> Vec<ClientLoad> {
+    let mut loads = Vec::with_capacity(members.len());
+    for (slot, node) in members.iter().enumerate() {
+        if dead.get(node.id).copied().unwrap_or(false) || plan.is_dropped(round, node.id) {
+            continue;
+        }
+        let attempts = plan
+            .lost_attempts(round, node.id)
+            .min(plan.config().max_retries + 1);
+        let backoff = retry_backoff_s(plan.config().timeout_s, attempts);
+        if trained && participated[slot] {
+            loads.push(ClientLoad {
+                batches: s.batches_per_client(node),
+                slowdown: plan.slowdown(round, node.id),
+                extra_s: backoff,
+            });
+        } else {
+            loads.push(ClientLoad {
+                batches: 0,
+                slowdown: 1.0,
+                extra_s: backoff,
+            });
+        }
+    }
+    loads
 }
 
 /// One shard's whole cycle: clone the globals, run `inner_rounds` SFL
@@ -249,26 +344,83 @@ pub struct ShardCycleOut {
 /// SSFL/BSFL orchestrators fan out over `util::pool::parallel_map`; it
 /// only borrows `TrainCtx` immutably, so any number of shards can run
 /// concurrently against the shared PJRT runtime.
+///
+/// `round` indexes the fault plan; `dead` is the node-indexed crash-stop
+/// mask (pass `&[]` when no node can be dead).  With an inactive fault
+/// plan this takes the exact pre-fault code path (bit-identical runs).
 pub fn run_shard_cycle(
     ctx: &TrainCtx<'_>,
     shard_id: usize,
+    round: usize,
     server_global: &Bundle,
     client_global: &Bundle,
     members: &[&Node],
+    dead: &[bool],
 ) -> Result<ShardCycleOut> {
     let mut s = ctx.fork_shard(shard_id);
     let mut server_i = server_global.clone();
     let mut client_models = vec![client_global.clone(); members.len()];
     let mut stats = StepStats::default();
-    for _ in 0..ctx.cfg.inner_rounds {
-        let (new_server, st, t) = run_shard_round(&mut s, &server_i, &mut client_models, members)?;
-        server_i = new_server;
-        stats.merge(st);
-        s.vtime_s += t;
+    let plan = &ctx.fault;
+
+    if !plan.active() {
+        for _ in 0..ctx.cfg.inner_rounds {
+            let (new_server, st, t) =
+                run_shard_round(&mut s, &server_i, &mut client_models, members)?;
+            server_i = new_server;
+            stats.merge(st);
+            s.vtime_s += t;
+        }
+        let n = members.len();
+        return Ok(ShardCycleOut {
+            server: server_i,
+            clients: client_models,
+            participated: vec![true; n],
+            quorum_met: true,
+            faults: RoundFaults {
+                participants: n,
+                ..RoundFaults::default()
+            },
+            stats,
+            vtime_s: s.vtime_s,
+            traffic: s.traffic,
+        });
     }
+
+    let (participated, faults) = classify_members(&mut s, plan, round, members, dead);
+    let quorum_met = faults.participants >= plan.quorum_needed(members.len());
+    for _ in 0..ctx.cfg.inner_rounds {
+        if quorum_met {
+            let mut server_copies: Vec<Bundle> = Vec::new();
+            for (slot, node) in members.iter().enumerate() {
+                if !participated[slot] {
+                    continue;
+                }
+                let mut copy = server_i.clone();
+                let st =
+                    train_client_on_server_copy(&mut s, &mut client_models[slot], &mut copy, node)?;
+                stats.merge(st);
+                server_copies.push(copy);
+            }
+            if !server_copies.is_empty() {
+                let refs: Vec<&Bundle> = server_copies.iter().collect();
+                server_i = crate::aggregation::fedavg(&refs)?;
+            }
+        }
+        let loads = fault_loads(&s, plan, round, members, &participated, dead, quorum_met);
+        s.vtime_s += s.sim.round_with(&loads).round_s;
+    }
+    let effective = if quorum_met {
+        participated
+    } else {
+        vec![false; members.len()]
+    };
     Ok(ShardCycleOut {
         server: server_i,
         clients: client_models,
+        participated: effective,
+        quorum_met,
+        faults,
         stats,
         vtime_s: s.vtime_s,
         traffic: s.traffic,
@@ -287,36 +439,82 @@ pub fn run_shard_cycle(
 /// Contrast with [`run_shard_round`]'s per-client server copies +
 /// averaging (Algorithm 1): bounding that drift to J=clients-per-shard
 /// and averaging shard servers is exactly the smoothing SSFL adds.
+/// `round` indexes `plan`; on an inactive plan this takes the exact
+/// pre-fault code path.  Returns (stats, virtual seconds, fault
+/// counters, quorum-gated participation mask).
 pub fn run_interleaved_round(
     ctx: &mut ShardCtx<'_>,
+    plan: &FaultPlan,
+    round: usize,
     server_model: &mut Bundle,
     client_models: &mut [Bundle],
     clients: &[&Node],
-) -> Result<(StepStats, f64)> {
+) -> Result<(StepStats, f64, RoundFaults, Vec<bool>)> {
     assert_eq!(client_models.len(), clients.len());
     let mut stats = StepStats::default();
     let b = ctx.ops.train_batch_size();
-    let mut max_batches = 0usize;
 
-    for (j, node) in clients.iter().enumerate() {
-        for _ in 0..ctx.cfg.local_epochs {
-            for batch in node.train.batches(b) {
-                let st = ctx.ops.full_train_step(
-                    &mut client_models[j],
-                    server_model,
-                    &batch,
-                    ctx.cfg.lr,
-                )?;
-                stats.merge(st);
+    if !plan.active() {
+        let mut max_batches = 0usize;
+        for (j, node) in clients.iter().enumerate() {
+            for _ in 0..ctx.cfg.local_epochs {
+                for batch in node.train.batches(b) {
+                    let st = ctx.ops.full_train_step(
+                        &mut client_models[j],
+                        server_model,
+                        &batch,
+                        ctx.cfg.lr,
+                    )?;
+                    stats.merge(st);
+                }
             }
+            max_batches = max_batches.max(ctx.batches_per_client(node));
+            ctx.record_shard_traffic(ctx.batches_per_client(node));
         }
-        max_batches = max_batches.max(ctx.batches_per_client(node));
-        ctx.record_shard_traffic(ctx.batches_per_client(node));
+
+        // clients compute in parallel; the serial server is the bottleneck
+        let round = ctx.sim.round(clients.len(), max_batches);
+        let n = clients.len();
+        return Ok((
+            stats,
+            round.round_s,
+            RoundFaults {
+                participants: n,
+                ..RoundFaults::default()
+            },
+            vec![true; n],
+        ));
     }
 
-    // clients compute in parallel; the serial server is the bottleneck
-    let round = ctx.sim.round(clients.len(), max_batches);
-    Ok((stats, round.round_s))
+    let (participated, faults) = classify_members(ctx, plan, round, clients, &[]);
+    let quorum_met = faults.participants >= plan.quorum_needed(clients.len());
+    if quorum_met {
+        for (j, node) in clients.iter().enumerate() {
+            if !participated[j] {
+                continue;
+            }
+            for _ in 0..ctx.cfg.local_epochs {
+                for batch in node.train.batches(b) {
+                    let st = ctx.ops.full_train_step(
+                        &mut client_models[j],
+                        server_model,
+                        &batch,
+                        ctx.cfg.lr,
+                    )?;
+                    stats.merge(st);
+                }
+            }
+            ctx.record_shard_traffic(ctx.batches_per_client(node));
+        }
+    }
+    let loads = fault_loads(ctx, plan, round, clients, &participated, &[], quorum_met);
+    let round_s = ctx.sim.round_with(&loads).round_s;
+    let effective = if quorum_met {
+        participated
+    } else {
+        vec![false; clients.len()]
+    };
+    Ok((stats, round_s, faults, effective))
 }
 
 /// Ship a model bundle over a link, accounting traffic; returns transfer
@@ -344,6 +542,7 @@ pub fn push_round_record(
     valset: &Dataset,
     round_s: f64,
     train_stats: &StepStats,
+    faults: &RoundFaults,
 ) -> Result<f64> {
     let ev = ctx.ops.evaluate(client, server, valset)?;
     let cum = records.last().map(|r| r.cum_s).unwrap_or(0.0) + round_s;
@@ -354,12 +553,23 @@ pub fn push_round_record(
         round_s,
         cum_s: cum,
         train_loss: train_stats.mean_loss(),
+        participants: faults.participants,
+        dropped: faults.dropped,
+        retries: faults.retries,
+        failovers: faults.failovers,
+        view_changes: faults.view_changes,
     });
     crate::debug!(
-        "round {round}: val_loss={:.4} val_acc={:.3} round_s={:.1}",
+        "round {round}: val_loss={:.4} val_acc={:.3} round_s={:.1} \
+         participants={} dropped={} retries={} failovers={} view_changes={}",
         ev.loss,
         ev.accuracy,
-        round_s
+        round_s,
+        faults.participants,
+        faults.dropped,
+        faults.retries,
+        faults.failovers,
+        faults.view_changes
     );
     Ok(ev.loss)
 }

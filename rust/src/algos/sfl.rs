@@ -9,7 +9,7 @@
 
 use anyhow::Result;
 
-use crate::aggregation::fedavg;
+use crate::aggregation::participant_fedavg;
 use crate::config::ExpConfig;
 use crate::data::Dataset;
 use crate::metrics::RunResult;
@@ -54,27 +54,39 @@ pub fn run_with_ctx(
         let mut client_models = vec![client_global.clone(); clients.len()];
         // SFL is a single logical shard; fork shard 0 and absorb after.
         let mut sctx = ctx.fork_shard(0);
-        let (stats, mut round_s) =
-            run_interleaved_round(&mut sctx, &mut server_global, &mut client_models, &clients)?;
+        let (stats, mut round_s, faults, participated) = run_interleaved_round(
+            &mut sctx,
+            &ctx.fault,
+            round,
+            &mut server_global,
+            &mut client_models,
+            &clients,
+        )?;
         ctx.absorb_shard(&sctx);
 
-        // FL server aggregation of client models (upload + broadcast)
-        let refs: Vec<&crate::tensor::Bundle> = client_models.iter().collect();
-        client_global = fedavg(&refs)?;
-        let mut agg_s: f64 = 0.0;
-        for cm in &client_models {
-            agg_s = agg_s.max(ship_model(
-                &mut ctx.traffic,
-                &ctx.lan,
-                cm,
-                MsgKind::ModelUpdate,
-            ));
+        // FL server aggregation of the client models that reported
+        // (all of them on fault-free runs — identical to plain FedAvg);
+        // below quorum the round keeps the previous global.
+        if participated.iter().any(|&p| p) {
+            let refs: Vec<&crate::tensor::Bundle> = client_models.iter().collect();
+            client_global = participant_fedavg(&refs, &participated)?;
+            let mut agg_s: f64 = 0.0;
+            for (cm, &p) in client_models.iter().zip(participated.iter()) {
+                if p {
+                    agg_s = agg_s.max(ship_model(
+                        &mut ctx.traffic,
+                        &ctx.lan,
+                        cm,
+                        MsgKind::ModelUpdate,
+                    ));
+                }
+            }
+            // broadcast back (same size, parallel to all clients)
+            agg_s += ctx.lan.transfer_s(client_global.wire_bytes());
+            ctx.traffic
+                .record(MsgKind::ModelUpdate, client_global.wire_bytes());
+            round_s += agg_s;
         }
-        // broadcast back (same size, parallel to all clients)
-        agg_s += ctx.lan.transfer_s(client_global.wire_bytes());
-        ctx.traffic
-            .record(MsgKind::ModelUpdate, client_global.wire_bytes());
-        round_s += agg_s;
 
         let val_loss = push_round_record(
             ctx,
@@ -85,6 +97,7 @@ pub fn run_with_ctx(
             valset,
             round_s,
             &stats,
+            &faults,
         )?;
         if stop.update(val_loss) {
             stopped_early = true;

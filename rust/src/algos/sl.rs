@@ -11,8 +11,9 @@ use anyhow::Result;
 
 use crate::config::ExpConfig;
 use crate::data::Dataset;
+use crate::fault::RoundFaults;
 use crate::metrics::RunResult;
-use crate::netsim::MsgKind;
+use crate::netsim::{retry_backoff_s, MsgKind};
 use crate::runtime::{ModelOps, StepStats};
 
 use super::common::{
@@ -55,7 +56,36 @@ pub fn run_with_ctx(
         // round, absorb its traffic afterwards (same totals as before
         // the TrainCtx/ShardCtx split — Traffic sums are order-free).
         let mut sctx = ctx.fork_shard(0);
+        // Under faults the ring simply skips dropped clients; there is
+        // no aggregation in SL, so no quorum — sequential timing is
+        // summed inline with per-client slowdowns and retry backoff.
+        let active = ctx.fault.active();
+        let mut faults = RoundFaults::default();
+        let mut seq_s = 0.0f64;
         for node in clients {
+            if active && ctx.fault.effectively_dropped(round, node.id) {
+                faults.dropped += 1;
+                if ctx.fault.lost_to_timeout(round, node.id)
+                    && !ctx.fault.is_dropped(round, node.id)
+                {
+                    let r = ctx.fault.config().max_retries;
+                    faults.retries += r;
+                    for _ in 0..r {
+                        sctx.traffic.record(MsgKind::Retransmit, sctx.sim.act_bytes);
+                    }
+                    seq_s += retry_backoff_s(ctx.fault.config().timeout_s, r + 1);
+                }
+                continue;
+            }
+            faults.participants += 1;
+            if active {
+                let lost = ctx.fault.lost_attempts(round, node.id);
+                faults.retries += lost;
+                for _ in 0..lost {
+                    sctx.traffic.record(MsgKind::Retransmit, sctx.sim.act_bytes);
+                }
+                seq_s += retry_backoff_s(ctx.fault.config().timeout_s, lost);
+            }
             // sequential: the SHARED server model is updated in place —
             // no per-client copies in SL.
             let st = train_client_on_server_copy(
@@ -65,18 +95,32 @@ pub fn run_with_ctx(
                 node,
             )?;
             stats.merge(st);
-            batches_total += sctx.batches_per_client(node);
+            let batches = sctx.batches_per_client(node);
+            batches_total += batches;
+            if active {
+                let sd = ctx.fault.slowdown(round, node.id);
+                let up = sctx.sim.link.transfer_s(sctx.sim.act_bytes);
+                let down = sctx.sim.link.transfer_s(sctx.sim.grad_bytes);
+                let per_batch = sd
+                    * (sctx.sim.prof.client_fwd_s + up + down + sctx.sim.prof.client_bwd_s)
+                    + sctx.sim.prof.server_step_s;
+                seq_s += batches as f64 * per_batch
+                    + sctx.sim.link.transfer_s(client_model.wire_bytes());
+            }
             // client-model relay to the next client
             sctx.traffic
                 .record(MsgKind::ModelUpdate, client_model.wire_bytes());
         }
         ctx.absorb_shard(&sctx);
 
-        let per_client = batches_total / clients.len().max(1);
-        let round_s = ctx
-            .sim
-            .round_sequential(clients.len(), per_client, client_model.wire_bytes())
-            .round_s;
+        let round_s = if active {
+            seq_s
+        } else {
+            let per_client = batches_total / clients.len().max(1);
+            ctx.sim
+                .round_sequential(clients.len(), per_client, client_model.wire_bytes())
+                .round_s
+        };
 
         let val_loss = push_round_record(
             ctx,
@@ -87,6 +131,7 @@ pub fn run_with_ctx(
             valset,
             round_s,
             &stats,
+            &faults,
         )?;
         if stop.update(val_loss) {
             stopped_early = true;

@@ -14,9 +14,11 @@
 
 use anyhow::Result;
 
-use crate::aggregation::fedavg;
+use crate::aggregation::participant_fedavg;
 use crate::config::ExpConfig;
 use crate::data::Dataset;
+use crate::error::SplitFedError;
+use crate::fault::RoundFaults;
 use crate::metrics::RunResult;
 use crate::netsim::{self, MsgKind};
 use crate::nodes::Node;
@@ -59,6 +61,11 @@ pub fn run_with_ctx(
     let cfg = ctx.cfg;
     let nodes = make_nodes(cfg, corpus);
     let (_, shard_clients) = static_shards(cfg);
+    // Mutable topology: a crashed shard's clients fail over (round-robin)
+    // to the surviving shards; `shard_alive` is the persistent liveness
+    // mask (crash-stop — a dead shard server never comes back).
+    let mut member_ids: Vec<Vec<usize>> = shard_clients;
+    let mut shard_alive = vec![true; cfg.shards];
 
     let (mut client_global, mut server_global) = ctx.ops.init_models()?;
     let mut records = Vec::with_capacity(cfg.rounds);
@@ -68,10 +75,39 @@ pub fn run_with_ctx(
     let threads = cfg.worker_threads();
 
     for round in 0..cfg.rounds {
-        let mut shard_servers: Vec<Bundle> = Vec::with_capacity(cfg.shards);
-        let mut all_clients: Vec<Bundle> = Vec::new();
-        let mut shard_times: Vec<f64> = Vec::with_capacity(cfg.shards);
         let mut stats = StepStats::default();
+        let mut faults = RoundFaults::default();
+
+        if let Some(cs) = ctx.fault.shard_crash(round) {
+            if cs < cfg.shards && shard_alive[cs] {
+                shard_alive[cs] = false;
+                let orphans = std::mem::take(&mut member_ids[cs]);
+                let targets: Vec<usize> =
+                    (0..cfg.shards).filter(|&s| shard_alive[s]).collect();
+                if targets.is_empty() {
+                    return Err(SplitFedError::Fault(format!(
+                        "round {round}: last shard ({cs}) crashed — no failover target"
+                    ))
+                    .into());
+                }
+                faults.failovers += orphans.len();
+                crate::info!(
+                    "round {round}: shard {cs} crashed; failing {} clients over to {} shards",
+                    faults.failovers,
+                    targets.len()
+                );
+                for (k, id) in orphans.into_iter().enumerate() {
+                    member_ids[targets[k % targets.len()]].push(id);
+                }
+            }
+        }
+        let alive_ids: Vec<usize> = (0..cfg.shards).filter(|&s| shard_alive[s]).collect();
+
+        let mut shard_servers: Vec<Bundle> = Vec::with_capacity(alive_ids.len());
+        let mut shard_quorum: Vec<bool> = Vec::with_capacity(alive_ids.len());
+        let mut all_clients: Vec<Bundle> = Vec::new();
+        let mut client_mask: Vec<bool> = Vec::new();
+        let mut shard_times: Vec<f64> = Vec::with_capacity(alive_ids.len());
 
         // Wall-clock parallel shard execution: each shard forks a
         // private ShardCtx and trains against the shared PJRT runtime;
@@ -81,45 +117,61 @@ pub fn run_with_ctx(
             let ctx_ref: &TrainCtx<'_> = ctx;
             let server_ref = &server_global;
             let client_ref = &client_global;
-            parallel_map((0..cfg.shards).collect(), threads, |shard| {
+            let member_ids_ref = &member_ids;
+            parallel_map(alive_ids.clone(), threads, |shard| {
                 let members: Vec<&Node> =
-                    shard_clients[shard].iter().map(|&id| &nodes[id]).collect();
-                run_shard_cycle(ctx_ref, shard, server_ref, client_ref, &members)
+                    member_ids_ref[shard].iter().map(|&id| &nodes[id]).collect();
+                run_shard_cycle(ctx_ref, shard, round, server_ref, client_ref, &members, &[])
             })
         };
         for outcome in outcomes {
             let out = outcome?;
             ctx.traffic.merge(&out.traffic);
             stats.merge(out.stats);
+            faults.merge(&out.faults);
             shard_servers.push(out.server);
+            shard_quorum.push(out.quorum_met);
             all_clients.extend(out.clients);
+            client_mask.extend(out.participated);
             shard_times.push(out.vtime_s);
         }
 
-        // FL server aggregation across shards (Algorithm 1 lines 24-28).
-        let s_refs: Vec<&Bundle> = shard_servers.iter().collect();
-        server_global = fedavg(&s_refs)?;
-        let c_refs: Vec<&Bundle> = all_clients.iter().collect();
-        client_global = fedavg(&c_refs)?;
+        // FL server aggregation across shards (Algorithm 1 lines 24-28),
+        // restricted to shards that met quorum / clients that reported —
+        // all of them on fault-free runs, making this bit-identical to
+        // plain FedAvg.  With no survivors the round keeps the previous
+        // globals.
+        if shard_quorum.iter().any(|&q| q) {
+            let s_refs: Vec<&Bundle> = shard_servers.iter().collect();
+            server_global = participant_fedavg(&s_refs, &shard_quorum)?;
+        }
+        if client_mask.iter().any(|&p| p) {
+            let c_refs: Vec<&Bundle> = all_clients.iter().collect();
+            client_global = participant_fedavg(&c_refs, &client_mask)?;
+        }
 
         // shards run in parallel; aggregation traffic afterwards
         let mut round_s = netsim::parallel(&shard_times);
         let mut agg_s: f64 = 0.0;
-        for sm in &shard_servers {
-            agg_s = agg_s.max(ship_model(
-                &mut ctx.traffic,
-                &ctx.lan,
-                sm,
-                MsgKind::ModelUpdate,
-            ));
+        for (sm, &q) in shard_servers.iter().zip(shard_quorum.iter()) {
+            if q {
+                agg_s = agg_s.max(ship_model(
+                    &mut ctx.traffic,
+                    &ctx.lan,
+                    sm,
+                    MsgKind::ModelUpdate,
+                ));
+            }
         }
-        for cm in &all_clients {
-            agg_s = agg_s.max(ship_model(
-                &mut ctx.traffic,
-                &ctx.lan,
-                cm,
-                MsgKind::ModelUpdate,
-            ));
+        for (cm, &p) in all_clients.iter().zip(client_mask.iter()) {
+            if p {
+                agg_s = agg_s.max(ship_model(
+                    &mut ctx.traffic,
+                    &ctx.lan,
+                    cm,
+                    MsgKind::ModelUpdate,
+                ));
+            }
         }
         // broadcast the two globals back
         agg_s += ctx
@@ -140,6 +192,7 @@ pub fn run_with_ctx(
             valset,
             round_s,
             &stats,
+            &faults,
         )?;
         if stop.update(val_loss) {
             stopped_early = true;

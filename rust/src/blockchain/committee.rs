@@ -44,7 +44,7 @@ impl Assignment {
 pub fn median(scores: &[f64]) -> f64 {
     assert!(!scores.is_empty(), "median of empty scores");
     let mut s = scores.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).expect("NaN score"));
+    s.sort_by(|a, b| a.total_cmp(b));
     let n = s.len();
     if n % 2 == 1 {
         s[n / 2]
@@ -60,8 +60,7 @@ pub fn select_top_k(final_scores: &[f64], k: usize) -> Vec<ShardId> {
     let mut ids: Vec<ShardId> = (0..final_scores.len()).collect();
     ids.sort_by(|&a, &b| {
         final_scores[a]
-            .partial_cmp(&final_scores[b])
-            .expect("NaN score")
+            .total_cmp(&final_scores[b])
             .then(a.cmp(&b))
     });
     ids.truncate(k.min(final_scores.len()));
@@ -90,6 +89,34 @@ pub fn elect_committee(
     random: bool,
     rng: &mut Rng,
 ) -> Assignment {
+    elect_committee_excluding(
+        n_nodes,
+        shards,
+        clients_per_shard,
+        prev_committee,
+        scores,
+        &[],
+        random,
+        rng,
+    )
+}
+
+/// [`elect_committee`] with a crash-stop mask: `dead[n]` bars node `n`
+/// from a committee seat (fault tolerance — a dead node cannot serve).
+/// Dead nodes are still dealt as clients so the assignment stays a
+/// partition of all nodes; the orchestrator skips them during training.
+/// An empty mask means no node is dead.
+#[allow(clippy::too_many_arguments)]
+pub fn elect_committee_excluding(
+    n_nodes: usize,
+    shards: usize,
+    clients_per_shard: usize,
+    prev_committee: &[NodeId],
+    scores: &[f64],
+    dead: &[bool],
+    random: bool,
+    rng: &mut Rng,
+) -> Assignment {
     assert_eq!(
         n_nodes,
         shards * (clients_per_shard + 1),
@@ -99,6 +126,14 @@ pub fn elect_committee(
     assert!(
         prev_committee.len() <= n_nodes - shards,
         "rotation infeasible: too few non-members"
+    );
+    let is_dead = |n: NodeId| dead.get(n).copied().unwrap_or(false);
+    assert!(
+        (0..n_nodes)
+            .filter(|&n| !is_dead(n) && !prev_committee.contains(&n))
+            .count()
+            >= shards,
+        "election infeasible: fewer live non-member nodes than shards"
     );
 
     let order: Vec<NodeId> = if random {
@@ -110,21 +145,17 @@ pub fn elect_committee(
         let mut keyed: Vec<(f64, u64, NodeId)> = (0..n_nodes)
             .map(|n| (scores[n], rng.next_u64(), n))
             .collect();
-        keyed.sort_by(|a, b| {
-            a.0.partial_cmp(&b.0)
-                .expect("NaN score")
-                .then(a.1.cmp(&b.1))
-        });
+        keyed.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         keyed.into_iter().map(|(_, _, n)| n).collect()
     };
 
-    // Servers: best-scoring nodes that did NOT serve last cycle.
+    // Servers: best-scoring LIVE nodes that did NOT serve last cycle.
     let mut committee = Vec::with_capacity(shards);
     for &n in &order {
         if committee.len() == shards {
             break;
         }
-        if !prev_committee.contains(&n) {
+        if !prev_committee.contains(&n) && !is_dead(n) {
             committee.push(n);
         }
     }
@@ -204,5 +235,39 @@ mod tests {
         let a = elect_committee(36, 6, 5, &[], &vec![f64::INFINITY; 36], true, &mut rng);
         assert!(a.is_partition_of(36));
         assert_eq!(a.committee.len(), 6);
+    }
+
+    #[test]
+    fn dead_nodes_never_seat_but_stay_in_partition() {
+        let mut rng = Rng::new(4);
+        let mut dead = vec![false; 9];
+        dead[0] = true;
+        dead[4] = true;
+        let a = elect_committee_excluding(
+            9,
+            3,
+            2,
+            &[],
+            &vec![0.5; 9],
+            &dead,
+            true,
+            &mut rng,
+        );
+        assert!(a.is_partition_of(9));
+        for m in &a.committee {
+            assert!(!dead[*m], "dead node {m} was seated");
+        }
+    }
+
+    #[test]
+    fn empty_dead_mask_matches_plain_election() {
+        // elect_committee must stay a pure alias of the excluding variant
+        // with no dead nodes (same rng draw sequence).
+        let scores = vec![0.5; 9];
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let a = elect_committee(9, 3, 2, &[], &scores, false, &mut r1);
+        let b = elect_committee_excluding(9, 3, 2, &[], &scores, &[], false, &mut r2);
+        assert_eq!(a, b);
     }
 }

@@ -7,13 +7,20 @@
 //! BSFL orchestrator in `algos::bsfl` drives these exactly the way the
 //! paper's Fabric peers would invoke chaincode.
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use super::chain::Chain;
 use super::committee::{self, Assignment};
 use super::store::ModelStore;
 use super::tx::{Digest, NodeId, ShardId, Transaction};
+use crate::error::SplitFedError;
 use crate::util::rng::Rng;
+
+/// Contract-rejection error (exit code 3 at the binary boundary): a
+/// simulated node misbehaving is a simulated event, never a panic.
+fn cerr(msg: String) -> anyhow::Error {
+    SplitFedError::Contract(msg).into()
+}
 
 /// `AssignNodes` — elect the cycle's committee and shard composition
 /// (random in cycle 1, score-based afterwards), and record it.
@@ -33,17 +40,63 @@ impl AssignNodes {
         random: bool,
         rng: &mut Rng,
     ) -> Result<Assignment> {
-        let a = committee::elect_committee(
+        Self::execute_excluding(
+            chain,
+            vtime,
+            cycle,
             n_nodes,
             shards,
             clients_per_shard,
             prev_committee,
             scores,
+            &[],
+            random,
+            rng,
+        )
+    }
+
+    /// [`Self::execute`] with a crash-stop mask: dead nodes never get a
+    /// committee seat (they are still dealt as clients to keep the
+    /// assignment a partition; the orchestrator skips them in training).
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_excluding(
+        chain: &mut Chain,
+        vtime: f64,
+        cycle: usize,
+        n_nodes: usize,
+        shards: usize,
+        clients_per_shard: usize,
+        prev_committee: &[NodeId],
+        scores: &[f64],
+        dead: &[bool],
+        random: bool,
+        rng: &mut Rng,
+    ) -> Result<Assignment> {
+        let live_eligible = (0..n_nodes)
+            .filter(|&n| {
+                !dead.get(n).copied().unwrap_or(false) && !prev_committee.contains(&n)
+            })
+            .count();
+        if live_eligible < shards {
+            return Err(cerr(format!(
+                "cycle {cycle}: only {live_eligible} live non-member nodes for {shards} \
+                 committee seats"
+            )));
+        }
+        let a = committee::elect_committee_excluding(
+            n_nodes,
+            shards,
+            clients_per_shard,
+            prev_committee,
+            scores,
+            dead,
             random,
             rng,
         );
         if !a.is_partition_of(n_nodes) {
-            bail!("assignment is not a partition of {n_nodes} nodes");
+            return Err(cerr(format!(
+                "assignment is not a partition of {n_nodes} nodes"
+            )));
         }
         chain.append(
             vtime,
@@ -111,7 +164,9 @@ impl ModelPropose {
                      if *c == cycle && *s == shard)
         });
         if duplicate {
-            bail!("shard {shard} already proposed a server model in cycle {cycle}");
+            return Err(cerr(format!(
+                "shard {shard} already proposed a server model in cycle {cycle}"
+            )));
         }
         chain.append(
             vtime,
@@ -143,7 +198,9 @@ impl ModelPropose {
                      if *c == cycle && *n == client)
         });
         if duplicate {
-            bail!("client {client} already proposed in cycle {cycle}");
+            return Err(cerr(format!(
+                "client {client} already proposed in cycle {cycle}"
+            )));
         }
         chain.append(
             vtime,
@@ -187,7 +244,11 @@ impl ModelPropose {
         let mut out = Vec::with_capacity(shards);
         for (i, (s, c)) in servers.into_iter().zip(clients).enumerate() {
             match s {
-                None => bail!("shard {i} never proposed a server model in cycle {cycle}"),
+                None => {
+                    return Err(cerr(format!(
+                        "shard {i} never proposed a server model in cycle {cycle}"
+                    )))
+                }
                 Some(d) => out.push((d, c)),
             }
         }
@@ -216,15 +277,17 @@ impl EvaluationPropose {
             .committee
             .iter()
             .position(|&n| n == from)
-            .ok_or_else(|| anyhow::anyhow!("node {from} is not a committee member"))?;
+            .ok_or_else(|| cerr(format!("node {from} is not a committee member")))?;
         if from_shard == about {
-            bail!("committee member {from} cannot score its own shard {about}");
+            return Err(cerr(format!(
+                "committee member {from} cannot score its own shard {about}"
+            )));
         }
         if about >= assignment.committee.len() {
-            bail!("shard {about} does not exist");
+            return Err(cerr(format!("shard {about} does not exist")));
         }
         if !value.is_finite() {
-            bail!("non-finite score");
+            return Err(cerr("non-finite score".to_string()));
         }
         chain.append(
             vtime,
@@ -238,11 +301,8 @@ impl EvaluationPropose {
         Ok(())
     }
 
-    /// Pure read: median the scores posted for `cycle` into per-shard
-    /// final scores (errors if any shard is unscored).  The orchestrator
-    /// calls this to learn the winners, aggregates their payloads, and
-    /// then calls [`Self::finalize`] with the resulting global digests.
-    pub fn tally(chain: &Chain, cycle: usize, shards: usize) -> Result<Vec<f64>> {
+    /// Posted scores for `cycle`, grouped by judged shard.
+    fn scores_per_shard(chain: &Chain, cycle: usize, shards: usize) -> Vec<Vec<f64>> {
         let mut per_shard: Vec<Vec<f64>> = vec![Vec::new(); shards];
         for tx in chain.txs() {
             if let Transaction::Score {
@@ -258,15 +318,49 @@ impl EvaluationPropose {
             }
         }
         per_shard
+    }
+
+    /// Pure read: median the scores posted for `cycle` into per-shard
+    /// final scores (errors if any shard is unscored).  The orchestrator
+    /// calls this to learn the winners, aggregates their payloads, and
+    /// then calls [`Self::finalize`] with the resulting global digests.
+    pub fn tally(chain: &Chain, cycle: usize, shards: usize) -> Result<Vec<f64>> {
+        Self::scores_per_shard(chain, cycle, shards)
             .iter()
             .enumerate()
             .map(|(i, scores)| {
                 if scores.is_empty() {
-                    bail!("no scores posted for shard {i} in cycle {cycle}");
+                    return Err(cerr(format!(
+                        "no scores posted for shard {i} in cycle {cycle}"
+                    )));
                 }
                 Ok(committee::median(scores))
             })
             .collect()
+    }
+
+    /// Failure-tolerant tally: shards with no posted scores (crashed, or
+    /// excluded by quorum) get `f64::INFINITY` — a loss that never wins
+    /// selection — instead of erroring.  Errors only if NO shard was
+    /// scored at all (the cycle made no progress).  With every shard
+    /// scored this returns exactly what [`Self::tally`] returns.
+    pub fn tally_partial(chain: &Chain, cycle: usize, shards: usize) -> Result<Vec<f64>> {
+        let per_shard = Self::scores_per_shard(chain, cycle, shards);
+        if per_shard.iter().all(|s| s.is_empty()) {
+            return Err(cerr(format!(
+                "no scores posted for any shard in cycle {cycle}"
+            )));
+        }
+        Ok(per_shard
+            .iter()
+            .map(|scores| {
+                if scores.is_empty() {
+                    f64::INFINITY
+                } else {
+                    committee::median(scores)
+                }
+            })
+            .collect())
     }
 
     /// Median the posted scores per shard, select winners, and record the
@@ -282,27 +376,7 @@ impl EvaluationPropose {
         global_server: Digest,
         global_client: Digest,
     ) -> Result<(Vec<ShardId>, Vec<f64>)> {
-        let mut per_shard: Vec<Vec<f64>> = vec![Vec::new(); shards];
-        for tx in chain.txs() {
-            if let Transaction::Score {
-                cycle: c,
-                about,
-                value,
-                ..
-            } = tx
-            {
-                if *c == cycle {
-                    per_shard[*about].push(*value);
-                }
-            }
-        }
-        let mut final_scores = Vec::with_capacity(shards);
-        for (i, scores) in per_shard.iter().enumerate() {
-            if scores.is_empty() {
-                bail!("no scores posted for shard {i} in cycle {cycle}");
-            }
-            final_scores.push(committee::median(scores));
-        }
+        let final_scores = Self::tally(chain, cycle, shards)?;
         let winners = committee::select_top_k(&final_scores, k);
         chain.append(
             vtime,
@@ -315,6 +389,91 @@ impl EvaluationPropose {
             }],
         );
         Ok((winners, final_scores))
+    }
+
+    /// Failure-tolerant [`Self::finalize`]: unscored shards tally as
+    /// `f64::INFINITY` and are excluded from the winner set (so `k` may
+    /// be under-filled in a degraded cycle).  Identical ledger bytes to
+    /// `finalize` when every shard was scored.
+    #[allow(clippy::too_many_arguments)]
+    pub fn finalize_partial(
+        chain: &mut Chain,
+        vtime: f64,
+        cycle: usize,
+        shards: usize,
+        k: usize,
+        global_server: Digest,
+        global_client: Digest,
+    ) -> Result<(Vec<ShardId>, Vec<f64>)> {
+        let final_scores = Self::tally_partial(chain, cycle, shards)?;
+        let winners: Vec<ShardId> = committee::select_top_k(&final_scores, k)
+            .into_iter()
+            .filter(|&w| final_scores[w].is_finite())
+            .collect();
+        if winners.is_empty() {
+            return Err(cerr(format!(
+                "cycle {cycle}: no scored shard available for aggregation"
+            )));
+        }
+        chain.append(
+            vtime,
+            vec![Transaction::Aggregation {
+                cycle,
+                winners: winners.clone(),
+                final_scores: final_scores.clone(),
+                global_server,
+                global_client,
+            }],
+        );
+        Ok((winners, final_scores))
+    }
+}
+
+/// `ViewChange` — replace a crashed committee member with a live client
+/// of the same shard for the rest of the cycle (evaluation duties),
+/// recording the succession on-chain (BSFL fault tolerance).
+pub struct ViewChange;
+
+impl ViewChange {
+    pub fn execute(
+        chain: &mut Chain,
+        vtime: f64,
+        cycle: usize,
+        assignment: &Assignment,
+        shard: ShardId,
+        crashed: NodeId,
+        replacement: NodeId,
+    ) -> Result<()> {
+        if assignment.committee.get(shard).copied() != Some(crashed) {
+            return Err(cerr(format!(
+                "view-change: node {crashed} is not the seated member of shard {shard}"
+            )));
+        }
+        if crashed == replacement {
+            return Err(cerr(format!(
+                "view-change: node {crashed} cannot replace itself"
+            )));
+        }
+        let in_shard = assignment
+            .clients
+            .get(shard)
+            .map(|c| c.contains(&replacement))
+            .unwrap_or(false);
+        if !in_shard {
+            return Err(cerr(format!(
+                "view-change: node {replacement} is not a client of shard {shard}"
+            )));
+        }
+        chain.append(
+            vtime,
+            vec![Transaction::ViewChange {
+                cycle,
+                shard,
+                crashed,
+                replacement,
+            }],
+        );
+        Ok(())
     }
 }
 
@@ -433,5 +592,69 @@ mod tests {
         let mut chain = Chain::new();
         assert!(EvaluationPropose::finalize(&mut chain, 0.0, 0, 2, 1, [0; 32], [0; 32])
             .is_err());
+    }
+
+    #[test]
+    fn partial_tally_tolerates_unscored_shards() {
+        let mut chain = Chain::new();
+        let a = assignment();
+        // only shard 0 gets scored; shards 1 and 2 are silent (crashed).
+        EvaluationPropose::post_score(&mut chain, 0.0, 0, &a, 1, 0, 0.2).unwrap();
+        EvaluationPropose::post_score(&mut chain, 0.0, 0, &a, 2, 0, 0.4).unwrap();
+        // strict tally errors, partial tally does not
+        assert!(EvaluationPropose::tally(&chain, 0, 3).is_err());
+        let finals = EvaluationPropose::tally_partial(&chain, 0, 3).unwrap();
+        assert!((finals[0] - 0.3).abs() < 1e-12);
+        assert!(finals[1].is_infinite() && finals[2].is_infinite());
+        // winners exclude the unscored shards even with k larger
+        let (winners, _) =
+            EvaluationPropose::finalize_partial(&mut chain, 1.0, 0, 3, 2, [0; 32], [0; 32])
+                .unwrap();
+        assert_eq!(winners, vec![0]);
+        chain.verify().unwrap();
+    }
+
+    #[test]
+    fn partial_tally_errors_when_nothing_scored() {
+        let chain = Chain::new();
+        assert!(EvaluationPropose::tally_partial(&chain, 0, 2).is_err());
+    }
+
+    #[test]
+    fn partial_matches_strict_when_fully_scored() {
+        let mut chain = Chain::new();
+        let a = assignment();
+        EvaluationPropose::post_score(&mut chain, 0.0, 0, &a, 1, 0, 0.2).unwrap();
+        EvaluationPropose::post_score(&mut chain, 0.0, 0, &a, 0, 1, 0.9).unwrap();
+        EvaluationPropose::post_score(&mut chain, 0.0, 0, &a, 0, 2, 0.1).unwrap();
+        let strict = EvaluationPropose::tally(&chain, 0, 3).unwrap();
+        let partial = EvaluationPropose::tally_partial(&chain, 0, 3).unwrap();
+        assert_eq!(strict, partial);
+    }
+
+    #[test]
+    fn view_change_validates_and_records() {
+        let mut chain = Chain::new();
+        let a = assignment();
+        // crashed must be the seated member of the shard
+        assert!(ViewChange::execute(&mut chain, 0.0, 0, &a, 0, 1, 3).is_err());
+        // replacement must belong to the same shard
+        assert!(ViewChange::execute(&mut chain, 0.0, 0, &a, 0, 0, 5).is_err());
+        // cannot replace itself
+        assert!(ViewChange::execute(&mut chain, 0.0, 0, &a, 0, 0, 0).is_err());
+        ViewChange::execute(&mut chain, 0.0, 0, &a, 0, 0, 4).unwrap();
+        let recorded = chain.txs().any(|t| {
+            matches!(
+                t,
+                Transaction::ViewChange {
+                    cycle: 0,
+                    shard: 0,
+                    crashed: 0,
+                    replacement: 4,
+                }
+            )
+        });
+        assert!(recorded, "ViewChange tx missing from ledger");
+        chain.verify().unwrap();
     }
 }

@@ -24,7 +24,7 @@ pub mod tx;
 
 pub use block::Block;
 pub use chain::Chain;
-pub use committee::{elect_committee, median, select_top_k};
-pub use contracts::{AssignNodes, EvaluationPropose, ModelPropose};
+pub use committee::{elect_committee, elect_committee_excluding, median, select_top_k};
+pub use contracts::{AssignNodes, EvaluationPropose, ModelPropose, ViewChange};
 pub use store::ModelStore;
 pub use tx::{Digest, NodeId, ShardId, Transaction};

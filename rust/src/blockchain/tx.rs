@@ -53,6 +53,15 @@ pub enum Transaction {
         /// Validation loss on the judge's local data (lower is better).
         value: f64,
     },
+    /// Committee view-change (fault tolerance): a crashed member is
+    /// replaced by a live client of the same shard for the cycle's
+    /// evaluation duties.
+    ViewChange {
+        cycle: usize,
+        shard: ShardId,
+        crashed: NodeId,
+        replacement: NodeId,
+    },
     /// EvaluationPropose output: winners and the new global models.
     Aggregation {
         cycle: usize,
@@ -128,6 +137,18 @@ impl Transaction {
                 out.extend((*about as u64).to_le_bytes());
                 out.extend(value.to_le_bytes());
             }
+            Transaction::ViewChange {
+                cycle,
+                shard,
+                crashed,
+                replacement,
+            } => {
+                out.push(5);
+                out.extend((*cycle as u64).to_le_bytes());
+                out.extend((*shard as u64).to_le_bytes());
+                out.extend((*crashed as u64).to_le_bytes());
+                out.extend((*replacement as u64).to_le_bytes());
+            }
             Transaction::Aggregation {
                 cycle,
                 winners,
@@ -197,5 +218,24 @@ mod tests {
             bytes: 10,
         };
         assert_ne!(a.hash(), s.hash());
+    }
+
+    #[test]
+    fn view_change_is_hashable_and_distinct() {
+        let v = Transaction::ViewChange {
+            cycle: 1,
+            shard: 2,
+            crashed: 3,
+            replacement: 4,
+        };
+        assert_eq!(v.hash(), v.hash());
+        let w = Transaction::ViewChange {
+            cycle: 1,
+            shard: 2,
+            crashed: 3,
+            replacement: 5,
+        };
+        assert_ne!(v.hash(), w.hash());
+        assert_ne!(v.hash(), score(0.5).hash());
     }
 }

@@ -15,6 +15,8 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::error::SplitFedError;
+use crate::fault::FaultConfig;
 use crate::util::args::Args;
 
 /// The four training algorithms under comparison.
@@ -111,6 +113,8 @@ pub struct ExpConfig {
     pub threads: usize,
     /// Early-stop patience in rounds (None = run all rounds).
     pub patience: Option<usize>,
+    /// Failure-model knobs (all off by default; see `fault` module).
+    pub fault: FaultConfig,
     /// Directory of AOT artifacts.
     pub artifacts_dir: PathBuf,
     /// Directory for real Fashion-MNIST (falls back to synthetic).
@@ -144,6 +148,7 @@ impl Default for ExpConfig {
             partition: Partition::Dirichlet(0.5),
             threads: 0,
             patience: None,
+            fault: FaultConfig::default(),
             artifacts_dir: PathBuf::from("artifacts"),
             data_dir: PathBuf::from("data/fashion-mnist"),
         }
@@ -203,26 +208,31 @@ impl ExpConfig {
         }
     }
 
-    /// Validate cross-field invariants.
+    /// Validate cross-field invariants.  Violations surface as typed
+    /// [`SplitFedError::Config`] values so `main` can map them to a
+    /// stable exit code instead of panicking.
     pub fn validate(&self) -> Result<()> {
         if self.nodes < 2 {
-            bail!("need at least 2 nodes");
+            return Err(cfg_err("need at least 2 nodes".into()));
         }
         match self.algo {
             Algo::Ssfl | Algo::Bsfl => {
                 if self.nodes != self.shards * (self.clients_per_shard + 1) {
-                    bail!(
+                    return Err(cfg_err(format!(
                         "nodes ({}) must equal shards*(clients_per_shard+1) = {}",
                         self.nodes,
                         self.shards * (self.clients_per_shard + 1)
-                    );
+                    )));
                 }
             }
             _ => {}
         }
         if self.algo == Algo::Bsfl {
             if self.k == 0 || self.k > self.shards {
-                bail!("K={} must be in 1..={}", self.k, self.shards);
+                return Err(cfg_err(format!(
+                    "K={} must be in 1..={}",
+                    self.k, self.shards
+                )));
             }
             // the paper's security bound (§V.E): 2 < K < N/2; warn only,
             // since the paper itself uses K=2 with N=3.
@@ -235,10 +245,29 @@ impl ExpConfig {
             }
         }
         if self.rounds == 0 || self.samples_per_node == 0 {
-            bail!("rounds and samples_per_node must be positive");
+            return Err(cfg_err("rounds and samples_per_node must be positive".into()));
         }
         if !(0.0..=1.0).contains(&self.attack_fraction) {
-            bail!("attack_fraction must be in [0,1]");
+            return Err(cfg_err("attack_fraction must be in [0,1]".into()));
+        }
+        self.fault.validate().map_err(cfg_err)?;
+        if matches!(self.algo, Algo::Ssfl | Algo::Bsfl)
+            && self.fault.shard_crash_round.is_some()
+            && self.fault.shard_crash_id >= self.shards
+        {
+            return Err(cfg_err(format!(
+                "fault-shard-crash-id {} out of range (shards = {})",
+                self.fault.shard_crash_id, self.shards
+            )));
+        }
+        if self.algo == Algo::Bsfl
+            && self.fault.committee_crash_round.is_some()
+            && self.fault.committee_crash_slot >= self.shards
+        {
+            return Err(cfg_err(format!(
+                "fault-committee-crash-slot {} out of range (shards = {})",
+                self.fault.committee_crash_slot, self.shards
+            )));
         }
         Ok(())
     }
@@ -295,6 +324,36 @@ impl ExpConfig {
         if let Some(p) = a.get("patience") {
             self.patience = Some(p.parse().map_err(|_| anyhow!("bad --patience"))?);
         }
+        // failure-model knobs (fault module)
+        self.fault.dropout_frac = a
+            .get_f64("fault-dropout", self.fault.dropout_frac)
+            .map_err(err)?;
+        self.fault.straggler_frac = a
+            .get_f64("fault-straggler", self.fault.straggler_frac)
+            .map_err(err)?;
+        self.fault.straggler_slowdown = a
+            .get_f64("fault-slowdown", self.fault.straggler_slowdown)
+            .map_err(err)?;
+        self.fault.msg_loss = a.get_f64("fault-msg-loss", self.fault.msg_loss).map_err(err)?;
+        self.fault.max_retries = a
+            .get_usize("fault-max-retries", self.fault.max_retries)
+            .map_err(err)?;
+        self.fault.timeout_s = a.get_f64("fault-timeout", self.fault.timeout_s).map_err(err)?;
+        self.fault.quorum_frac = a.get_f64("quorum-frac", self.fault.quorum_frac).map_err(err)?;
+        if let Some(r) = a.get("fault-shard-crash") {
+            self.fault.shard_crash_round =
+                Some(r.parse().map_err(|_| anyhow!("bad --fault-shard-crash"))?);
+        }
+        self.fault.shard_crash_id = a
+            .get_usize("fault-shard-crash-id", self.fault.shard_crash_id)
+            .map_err(err)?;
+        if let Some(r) = a.get("fault-committee-crash") {
+            self.fault.committee_crash_round =
+                Some(r.parse().map_err(|_| anyhow!("bad --fault-committee-crash"))?);
+        }
+        self.fault.committee_crash_slot = a
+            .get_usize("fault-committee-crash-slot", self.fault.committee_crash_slot)
+            .map_err(err)?;
         if let Some(d) = a.get("artifacts") {
             self.artifacts_dir = PathBuf::from(d);
         }
@@ -329,6 +388,11 @@ impl ExpConfig {
 
 fn err(e: String) -> anyhow::Error {
     anyhow!("{e}")
+}
+
+/// Wrap a message as a typed config error (exit code 2 in `main`).
+fn cfg_err(m: String) -> anyhow::Error {
+    SplitFedError::Config(m).into()
 }
 
 #[cfg(test)]
@@ -387,6 +451,47 @@ mod tests {
         let cfg = ExpConfig::from_file(&p).unwrap();
         assert_eq!(cfg.algo, Algo::Ssfl);
         assert_eq!(cfg.rounds, 7);
+    }
+
+    #[test]
+    fn fault_knobs_parse_and_validate() {
+        let args = Args::parse(
+            [
+                "--fault-dropout", "0.2", "--fault-straggler", "0.3",
+                "--fault-slowdown", "6", "--quorum-frac", "0.6",
+                "--fault-shard-crash", "1", "--fault-shard-crash-id", "1",
+                "--fault-committee-crash", "2",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        let mut cfg = ExpConfig::default();
+        cfg.apply_args(&args).unwrap();
+        assert!(cfg.fault.active());
+        assert!((cfg.fault.dropout_frac - 0.2).abs() < 1e-12);
+        assert_eq!(cfg.fault.shard_crash_round, Some(1));
+        assert_eq!(cfg.fault.shard_crash_id, 1);
+        assert_eq!(cfg.fault.committee_crash_round, Some(2));
+
+        // out-of-range knobs are typed Config errors
+        let bad = Args::parse(
+            ["--fault-dropout", "1.5"].iter().map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        let e = ExpConfig::default().apply_args(&bad).unwrap_err();
+        match e.downcast_ref::<SplitFedError>() {
+            Some(SplitFedError::Config(_)) => {}
+            other => panic!("expected Config error, got {other:?}"),
+        }
+
+        // crash target must exist in the sharded topology
+        let mut c = ExpConfig::default();
+        c.fault.shard_crash_round = Some(0);
+        c.fault.shard_crash_id = 99;
+        assert!(c.validate().is_err());
     }
 
     #[test]

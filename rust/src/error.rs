@@ -1,0 +1,64 @@
+//! Typed top-level errors with process exit codes.
+//!
+//! Most of the crate uses `anyhow` for context-rich propagation; the
+//! variants here mark the error *classes* the binary distinguishes at
+//! exit (a crashed simulated node must surface as a simulated event or a
+//! typed error — never a process abort).  `main.rs` downcasts the anyhow
+//! chain to map a [`SplitFedError`] to its exit code; anything untyped
+//! exits 1.
+
+use std::fmt;
+
+/// Error classes surfaced as process exit codes.
+#[derive(Clone, Debug)]
+pub enum SplitFedError {
+    /// Invalid configuration / CLI arguments (exit code 2).
+    Config(String),
+    /// A smart contract rejected an operation (exit code 3).
+    Contract(String),
+    /// The failure model left no way to make progress, e.g. every shard
+    /// crashed or no live shard was scored (exit code 4).
+    Fault(String),
+}
+
+impl SplitFedError {
+    pub fn exit_code(&self) -> u8 {
+        match self {
+            SplitFedError::Config(_) => 2,
+            SplitFedError::Contract(_) => 3,
+            SplitFedError::Fault(_) => 4,
+        }
+    }
+}
+
+impl fmt::Display for SplitFedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SplitFedError::Config(m) => write!(f, "config: {m}"),
+            SplitFedError::Contract(m) => write!(f, "contract: {m}"),
+            SplitFedError::Fault(m) => write!(f, "fault: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for SplitFedError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exit_codes_are_stable() {
+        assert_eq!(SplitFedError::Config("x".into()).exit_code(), 2);
+        assert_eq!(SplitFedError::Contract("x".into()).exit_code(), 3);
+        assert_eq!(SplitFedError::Fault("x".into()).exit_code(), 4);
+    }
+
+    #[test]
+    fn downcasts_through_anyhow() {
+        let e: anyhow::Error = SplitFedError::Contract("double propose".into()).into();
+        let t = e.downcast_ref::<SplitFedError>().unwrap();
+        assert_eq!(t.exit_code(), 3);
+        assert!(e.to_string().contains("double propose"));
+    }
+}

@@ -333,6 +333,63 @@ pub fn ablation_topk(h: &Harness, scale: Scale, seed: u64) -> Result<Vec<RunResu
     Ok(results)
 }
 
+/// FAULT SWEEP: SSFL and BSFL under increasing dropout, with the top
+/// tier adding a mid-run shard crash and (BSFL) a committee crash —
+/// the robustness counterpart of Table III.  Every run must complete
+/// all rounds via quorum aggregation / failover / view-change.
+pub fn fault_sweep(h: &Harness, scale: Scale, seed: u64) -> Result<Vec<RunResult>> {
+    let tiers: [(f64, bool); 4] = [(0.0, false), (0.1, false), (0.2, false), (0.4, true)];
+    let mut results = Vec::new();
+    for algo in [Algo::Ssfl, Algo::Bsfl] {
+        for &(dropout, crashes) in &tiers {
+            let mut cfg = ExpConfig::paper_9(algo);
+            scale.apply(&mut cfg);
+            cfg.seed = seed;
+            cfg.fault.dropout_frac = dropout;
+            if crashes {
+                cfg.fault.straggler_frac = 0.25;
+                cfg.fault.msg_loss = 0.05;
+                cfg.fault.shard_crash_round = Some(cfg.rounds / 2);
+                cfg.fault.shard_crash_id = 1;
+                if algo == Algo::Bsfl {
+                    cfg.fault.committee_crash_round = Some(cfg.rounds / 2);
+                    cfg.fault.committee_crash_slot = 0;
+                }
+            }
+            let tag = if crashes { "crash" } else { "drop" };
+            let name = format!(
+                "fault_{}_{}_{}",
+                cfg.algo.name(),
+                tag,
+                (dropout * 100.0) as usize
+            );
+            let mut r = h.run_and_save(&cfg, &name)?;
+            r.label = name;
+            results.push(r);
+        }
+    }
+    println!("\nFAULT SWEEP — SSFL/BSFL under dropout + crashes (9 nodes)");
+    println!(
+        "{:<24} {:>10} {:>8} {:>8} {:>9} {:>12}",
+        "run", "test_loss", "parts", "dropped", "failovers", "view_changes"
+    );
+    for r in &results {
+        let (p, d, fo, vc) = r.records.iter().fold((0, 0, 0, 0), |acc, rec| {
+            (
+                acc.0 + rec.participants,
+                acc.1 + rec.dropped,
+                acc.2 + rec.failovers,
+                acc.3 + rec.view_changes,
+            )
+        });
+        println!(
+            "{:<24} {:>10.3} {:>8} {:>8} {:>9} {:>12}",
+            r.label, r.test_loss, p, d, fo, vc
+        );
+    }
+    Ok(results)
+}
+
 fn print_convergence_table(fig: &str, results: &[RunResult]) {
     println!("\n{} — final validation losses", fig.to_uppercase());
     println!("{:<26} {:>10} {:>10} {:>12}", "run", "final", "best", "avg_round_s");

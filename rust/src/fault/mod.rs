@@ -1,0 +1,460 @@
+//! Fault injection: a seed-deterministic failure model for the
+//! simulation (ISSUE 6 / ROADMAP "Failure model").
+//!
+//! Real SplitFed deployments are motivated by unreliable, resource-
+//! constrained clients, yet the paper measures every result under a
+//! perfect-world assumption.  This module makes failure a first-class,
+//! injectable part of a run:
+//!
+//! * **Client dropout** — each round, every node is offline with
+//!   probability `dropout_frac` (it rejoins next round; state is not
+//!   lost, it simply contributes no update or virtual time).
+//! * **Stragglers** — with probability `straggler_frac` a node's
+//!   client-side compute *and* link charges are multiplied by
+//!   `straggler_slowdown` for the round (default 4.0x).
+//! * **Message loss** — each node's report is lost with probability
+//!   `msg_loss` per attempt; the sender retries after an exponential
+//!   timeout (`timeout_s`, doubling per attempt) up to `max_retries`
+//!   times, then gives up — at which point it counts as dropped for the
+//!   round.  Lost attempts are charged as backoff virtual time and
+//!   tallied as `MsgKind::Retransmit` traffic.
+//! * **Shard-server crash** — at round `shard_crash_round`, shard
+//!   `shard_crash_id`'s server crash-stops.  SSFL reassigns its clients
+//!   round-robin to surviving shards (failover); BSFL loses that shard's
+//!   cycle and re-elects without the dead node afterwards.
+//! * **Committee-member crash** — at cycle `committee_crash_round`, the
+//!   member seated at slot `committee_crash_slot` crash-stops after
+//!   proposals but before evaluation; BSFL runs a **view-change**,
+//!   promoting the shard's best-scoring live client to acting judge and
+//!   recording a `Transaction::ViewChange` on-chain.
+//!
+//! **Quorum rule**: a shard's round proceeds when at least
+//! `ceil(quorum_frac * clients)` of its clients report (default 0.5);
+//! aggregation then averages the survivors only.  Below quorum the shard
+//! keeps its previous models for the round.
+//!
+//! **Determinism**: the whole plan is precomputed by [`FaultPlan::generate`]
+//! from a dedicated RNG stream (`seed ^ FAULT_STREAM_SALT`, disjoint from
+//! the shard and node-building streams), so fault draws never depend on
+//! thread scheduling — `--threads 1` and `--threads N` stay bit-identical
+//! under faults (asserted by `rust/tests/fault_determinism.rs`).
+//!
+//! Knob defaults (all CLI-exposed as `--fault-*` / `--quorum-frac`):
+//! `dropout_frac = 0`, `straggler_frac = 0`, `straggler_slowdown = 4.0`,
+//! `msg_loss = 0`, `max_retries = 2`, `timeout_s = 1.0`,
+//! `quorum_frac = 0.5`, no crashes.
+
+use crate::util::rng::Rng;
+
+/// Salt for the fault-plan RNG stream: disjoint from the per-shard
+/// stream (`algos::common::SHARD_STREAM_SALT = 0x5AAD_C7F0_D15C_0000`)
+/// and the run-level stream (`seed ^ 0xA160_0000`), so enabling faults
+/// never perturbs node partitioning or training draws.
+const FAULT_STREAM_SALT: u64 = 0xFA17_0B5E_55ED_0001;
+
+/// All failure-model knobs (part of `config::ExpConfig`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Per-round probability a node is offline (0 = never).
+    pub dropout_frac: f64,
+    /// Per-round probability a node is a straggler.
+    pub straggler_frac: f64,
+    /// Multiplier on a straggler's client compute + link charges.
+    pub straggler_slowdown: f64,
+    /// Per-attempt probability a node's round report is lost.
+    pub msg_loss: f64,
+    /// Retries before a sender gives up on a lost report.
+    pub max_retries: usize,
+    /// Initial retry timeout, seconds (doubles per attempt).
+    pub timeout_s: f64,
+    /// Fraction of a shard's clients that must report for the round to
+    /// proceed (quorum = `max(1, ceil(quorum_frac * clients))`).
+    pub quorum_frac: f64,
+    /// Round at which the shard server crash-stops (None = never).
+    pub shard_crash_round: Option<usize>,
+    /// Which shard's server crashes.
+    pub shard_crash_id: usize,
+    /// Cycle at which a committee member crash-stops (None = never).
+    pub committee_crash_round: Option<usize>,
+    /// Which committee slot crashes.
+    pub committee_crash_slot: usize,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            dropout_frac: 0.0,
+            straggler_frac: 0.0,
+            straggler_slowdown: 4.0,
+            msg_loss: 0.0,
+            max_retries: 2,
+            timeout_s: 1.0,
+            quorum_frac: 0.5,
+            shard_crash_round: None,
+            shard_crash_id: 0,
+            committee_crash_round: None,
+            committee_crash_slot: 0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// True when any fault source is enabled.  Inactive configs take the
+    /// exact pre-fault code paths, so a benign run is bit-identical to
+    /// one from before this subsystem existed.
+    pub fn active(&self) -> bool {
+        self.dropout_frac > 0.0
+            || self.straggler_frac > 0.0
+            || self.msg_loss > 0.0
+            || self.shard_crash_round.is_some()
+            || self.committee_crash_round.is_some()
+    }
+
+    /// Range-check the knobs.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..1.0).contains(&self.dropout_frac) {
+            return Err(format!("fault-dropout {} must be in [0,1)", self.dropout_frac));
+        }
+        if !(0.0..=1.0).contains(&self.straggler_frac) {
+            return Err(format!("fault-straggler {} must be in [0,1]", self.straggler_frac));
+        }
+        if !(self.straggler_slowdown >= 1.0) || !self.straggler_slowdown.is_finite() {
+            return Err(format!(
+                "fault-slowdown {} must be finite and >= 1",
+                self.straggler_slowdown
+            ));
+        }
+        if !(0.0..1.0).contains(&self.msg_loss) {
+            return Err(format!("fault-msg-loss {} must be in [0,1)", self.msg_loss));
+        }
+        if self.max_retries > 16 {
+            return Err(format!(
+                "fault-max-retries {} too large (max 16; backoff is exponential)",
+                self.max_retries
+            ));
+        }
+        if !(self.timeout_s > 0.0) || !self.timeout_s.is_finite() {
+            return Err(format!("fault-timeout {} must be finite and > 0", self.timeout_s));
+        }
+        if !(self.quorum_frac > 0.0 && self.quorum_frac <= 1.0) {
+            return Err(format!("quorum-frac {} must be in (0,1]", self.quorum_frac));
+        }
+        Ok(())
+    }
+}
+
+/// The precomputed, seed-deterministic failure schedule of one run:
+/// per-(round, node) dropout / straggler / message-loss draws plus the
+/// configured crash events.  Pure data (`Clone + Sync`), so any number
+/// of shard workers can consult it concurrently.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    rounds: usize,
+    nodes: usize,
+    /// round-major: `dropped[round * nodes + node]`.
+    dropped: Vec<bool>,
+    slow: Vec<bool>,
+    /// Consecutive lost report attempts, capped at `max_retries + 1`
+    /// (the cap means the sender gave up).
+    lost: Vec<u8>,
+}
+
+impl FaultPlan {
+    /// Draw the full schedule from the dedicated fault stream.
+    pub fn generate(cfg: &FaultConfig, seed: u64, rounds: usize, nodes: usize) -> FaultPlan {
+        if !cfg.active() {
+            return FaultPlan::inactive();
+        }
+        let mut rng = Rng::new(seed ^ FAULT_STREAM_SALT);
+        let n = rounds * nodes;
+        let mut dropped = Vec::with_capacity(n);
+        let mut slow = Vec::with_capacity(n);
+        let mut lost = Vec::with_capacity(n);
+        for _ in 0..n {
+            dropped.push(rng.f64() < cfg.dropout_frac);
+            slow.push(rng.f64() < cfg.straggler_frac);
+            let mut l = 0u8;
+            while (l as usize) <= cfg.max_retries && rng.f64() < cfg.msg_loss {
+                l += 1;
+            }
+            lost.push(l);
+        }
+        FaultPlan {
+            cfg: cfg.clone(),
+            rounds,
+            nodes,
+            dropped,
+            slow,
+            lost,
+        }
+    }
+
+    /// A plan with every fault disabled (the default for benign runs).
+    pub fn inactive() -> FaultPlan {
+        FaultPlan {
+            cfg: FaultConfig::default(),
+            rounds: 0,
+            nodes: 0,
+            dropped: Vec::new(),
+            slow: Vec::new(),
+            lost: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    pub fn active(&self) -> bool {
+        self.cfg.active()
+    }
+
+    fn idx(&self, round: usize, node: usize) -> Option<usize> {
+        if round < self.rounds && node < self.nodes {
+            Some(round * self.nodes + node)
+        } else {
+            None
+        }
+    }
+
+    /// Node is offline for the whole round (no work, no virtual time).
+    pub fn is_dropped(&self, round: usize, node: usize) -> bool {
+        self.idx(round, node).map(|i| self.dropped[i]).unwrap_or(false)
+    }
+
+    /// Multiplier on the node's client compute + link charges this round.
+    pub fn slowdown(&self, round: usize, node: usize) -> f64 {
+        match self.idx(round, node) {
+            Some(i) if self.slow[i] => self.cfg.straggler_slowdown,
+            _ => 1.0,
+        }
+    }
+
+    /// Consecutive report attempts lost this round (0 = first try lands).
+    pub fn lost_attempts(&self, round: usize, node: usize) -> usize {
+        self.idx(round, node).map(|i| self.lost[i] as usize).unwrap_or(0)
+    }
+
+    /// The node exhausted its retries and gave up for the round.
+    pub fn lost_to_timeout(&self, round: usize, node: usize) -> bool {
+        self.lost_attempts(round, node) > self.cfg.max_retries
+    }
+
+    /// Offline OR timed out: the node contributes no update this round.
+    pub fn effectively_dropped(&self, round: usize, node: usize) -> bool {
+        self.is_dropped(round, node) || self.lost_to_timeout(round, node)
+    }
+
+    /// The shard whose server crash-stops at exactly this round, if any.
+    /// Crash-stop is permanent; orchestrators track liveness themselves
+    /// (SSFL keeps a shard-alive mask, BSFL marks the node dead).
+    pub fn shard_crash(&self, round: usize) -> Option<usize> {
+        match self.cfg.shard_crash_round {
+            Some(r) if r == round => Some(self.cfg.shard_crash_id),
+            _ => None,
+        }
+    }
+
+    /// The committee slot whose member crash-stops at exactly this cycle.
+    pub fn committee_crash(&self, cycle: usize) -> Option<usize> {
+        match self.cfg.committee_crash_round {
+            Some(r) if r == cycle => Some(self.cfg.committee_crash_slot),
+            _ => None,
+        }
+    }
+
+    /// Reports needed for a shard round to proceed:
+    /// `max(1, ceil(quorum_frac * total))`, 0 for an empty shard.
+    pub fn quorum_needed(&self, total: usize) -> usize {
+        if total == 0 {
+            return 0;
+        }
+        ((self.cfg.quorum_frac * total as f64).ceil() as usize)
+            .clamp(1, total)
+    }
+}
+
+/// Per-round degradation counters surfaced in `metrics::RoundRecord`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RoundFaults {
+    /// Clients whose updates were accepted this round.
+    pub participants: usize,
+    /// Clients offline or timed out this round.
+    pub dropped: usize,
+    /// Report retransmissions charged this round.
+    pub retries: usize,
+    /// Clients reassigned away from a crashed shard.
+    pub failovers: usize,
+    /// Committee view-changes executed this round.
+    pub view_changes: usize,
+}
+
+impl RoundFaults {
+    pub fn merge(&mut self, other: &RoundFaults) {
+        self.participants += other.participants;
+        self.dropped += other.dropped;
+        self.retries += other.retries;
+        self.failovers += other.failovers;
+        self.view_changes += other.view_changes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn faulty_cfg() -> FaultConfig {
+        FaultConfig {
+            dropout_frac: 0.2,
+            straggler_frac: 0.3,
+            msg_loss: 0.1,
+            shard_crash_round: Some(3),
+            shard_crash_id: 1,
+            committee_crash_round: Some(2),
+            committee_crash_slot: 2,
+            ..FaultConfig::default()
+        }
+    }
+
+    #[test]
+    fn plan_is_deterministic_in_seed() {
+        let cfg = faulty_cfg();
+        let a = FaultPlan::generate(&cfg, 7, 10, 36);
+        let b = FaultPlan::generate(&cfg, 7, 10, 36);
+        for r in 0..10 {
+            for n in 0..36 {
+                assert_eq!(a.is_dropped(r, n), b.is_dropped(r, n));
+                assert_eq!(a.slowdown(r, n).to_bits(), b.slowdown(r, n).to_bits());
+                assert_eq!(a.lost_attempts(r, n), b.lost_attempts(r, n));
+            }
+        }
+        let c = FaultPlan::generate(&cfg, 8, 10, 36);
+        let same = (0..10)
+            .flat_map(|r| (0..36).map(move |n| (r, n)))
+            .filter(|&(r, n)| a.is_dropped(r, n) == c.is_dropped(r, n))
+            .count();
+        assert!(same < 360, "different seeds must differ somewhere");
+    }
+
+    #[test]
+    fn rates_are_roughly_honored() {
+        let cfg = faulty_cfg();
+        let p = FaultPlan::generate(&cfg, 42, 100, 100);
+        let total = 100 * 100;
+        let dropped = (0..100)
+            .flat_map(|r| (0..100).map(move |n| (r, n)))
+            .filter(|&(r, n)| p.is_dropped(r, n))
+            .count();
+        let frac = dropped as f64 / total as f64;
+        assert!((frac - 0.2).abs() < 0.03, "dropout rate {frac}");
+        let slow = (0..100)
+            .flat_map(|r| (0..100).map(move |n| (r, n)))
+            .filter(|&(r, n)| p.slowdown(r, n) > 1.0)
+            .count();
+        let frac = slow as f64 / total as f64;
+        assert!((frac - 0.3).abs() < 0.03, "straggler rate {frac}");
+    }
+
+    #[test]
+    fn inactive_plan_is_benign() {
+        let p = FaultPlan::inactive();
+        assert!(!p.active());
+        assert!(!p.is_dropped(0, 0));
+        assert!(!p.effectively_dropped(5, 7));
+        assert_eq!(p.slowdown(3, 3).to_bits(), 1.0f64.to_bits());
+        assert_eq!(p.lost_attempts(1, 1), 0);
+        assert_eq!(p.shard_crash(0), None);
+        assert_eq!(p.committee_crash(0), None);
+    }
+
+    #[test]
+    fn out_of_range_round_is_benign() {
+        let p = FaultPlan::generate(&faulty_cfg(), 1, 2, 4);
+        assert!(!p.is_dropped(99, 0));
+        assert!(!p.is_dropped(0, 99));
+        assert_eq!(p.slowdown(99, 99), 1.0);
+    }
+
+    #[test]
+    fn crash_events_fire_exactly_once() {
+        let p = FaultPlan::generate(&faulty_cfg(), 1, 10, 9);
+        assert_eq!(p.shard_crash(3), Some(1));
+        assert_eq!(p.shard_crash(2), None);
+        assert_eq!(p.shard_crash(4), None);
+        assert_eq!(p.committee_crash(2), Some(2));
+        assert_eq!(p.committee_crash(3), None);
+    }
+
+    #[test]
+    fn quorum_math() {
+        let p = FaultPlan::generate(&faulty_cfg(), 1, 1, 1);
+        assert_eq!(p.quorum_needed(0), 0);
+        assert_eq!(p.quorum_needed(1), 1);
+        assert_eq!(p.quorum_needed(2), 1); // ceil(0.5*2) = 1
+        assert_eq!(p.quorum_needed(5), 3); // ceil(2.5) = 3
+        let mut cfg = faulty_cfg();
+        cfg.quorum_frac = 1.0;
+        let p = FaultPlan::generate(&cfg, 1, 1, 1);
+        assert_eq!(p.quorum_needed(5), 5);
+    }
+
+    #[test]
+    fn lost_attempts_capped_by_retries() {
+        let mut cfg = faulty_cfg();
+        cfg.msg_loss = 0.9;
+        cfg.max_retries = 2;
+        let p = FaultPlan::generate(&cfg, 5, 50, 50);
+        let max = (0..50)
+            .flat_map(|r| (0..50).map(move |n| p.lost_attempts(r, n)))
+            .max()
+            .unwrap();
+        assert!(max <= 3, "lost attempts {max} exceed max_retries + 1");
+        assert!(
+            (0..50).any(|n| p.lost_to_timeout(0, n)),
+            "90% loss should time someone out"
+        );
+    }
+
+    #[test]
+    fn validation_rejects_bad_knobs() {
+        assert!(FaultConfig::default().validate().is_ok());
+        assert!(faulty_cfg().validate().is_ok());
+        let mut c = FaultConfig::default();
+        c.dropout_frac = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = FaultConfig::default();
+        c.quorum_frac = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = FaultConfig::default();
+        c.straggler_slowdown = 0.5;
+        assert!(c.validate().is_err());
+        let mut c = FaultConfig::default();
+        c.timeout_s = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn round_faults_merge_sums() {
+        let mut a = RoundFaults {
+            participants: 3,
+            dropped: 1,
+            retries: 2,
+            failovers: 0,
+            view_changes: 1,
+        };
+        let b = RoundFaults {
+            participants: 2,
+            dropped: 2,
+            retries: 0,
+            failovers: 4,
+            view_changes: 0,
+        };
+        a.merge(&b);
+        assert_eq!(a.participants, 5);
+        assert_eq!(a.dropped, 3);
+        assert_eq!(a.retries, 2);
+        assert_eq!(a.failovers, 4);
+        assert_eq!(a.view_changes, 1);
+    }
+}

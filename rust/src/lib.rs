@@ -21,6 +21,9 @@
 //!   partitioners, batching.
 //! * [`runtime`] — PJRT client wrapper + manifest-driven executable cache.
 //! * [`netsim`] — virtual-time network/cost model for round times.
+//! * [`fault`] — seed-deterministic fault injection (dropout, stragglers,
+//!   message loss, shard/committee crashes) + quorum/failover semantics.
+//! * [`error`] — typed error classes mapped to process exit codes.
 //! * [`blockchain`] — hash-chained ledger, smart contracts, committee
 //!   consensus.
 //! * [`aggregation`] — FedAvg and top-K aggregation.
@@ -60,7 +63,9 @@ pub mod attack;
 pub mod blockchain;
 pub mod config;
 pub mod data;
+pub mod error;
 pub mod exp;
+pub mod fault;
 pub mod metrics;
 pub mod netsim;
 pub mod nodes;

@@ -15,6 +15,7 @@ use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use splitfed::config::ExpConfig;
+use splitfed::error::SplitFedError;
 use splitfed::exp::{self, Harness, Scale};
 use splitfed::runtime::{ModelOps, Runtime};
 use splitfed::util::args::Args;
@@ -30,12 +31,19 @@ USAGE:
                       [--election score|random] [--seed N]
                       [--threads N]  (shard worker threads; 0 = auto)
                       [--artifacts DIR] [--out DIR]
-  splitfed experiment fig2|fig3|fig4|table3|ablation-committee|ablation-topk
+                      fault injection (all off by default):
+                      [--fault-dropout F] [--fault-straggler F] [--fault-slowdown X]
+                      [--fault-msg-loss F] [--fault-max-retries N] [--fault-timeout S]
+                      [--quorum-frac F]
+                      [--fault-shard-crash ROUND] [--fault-shard-crash-id I]
+                      [--fault-committee-crash CYCLE] [--fault-committee-crash-slot I]
+  splitfed experiment fig2|fig3|fig4|table3|ablation-committee|ablation-topk|fault-sweep
                       [--scale smoke|small|paper] [--seed N]
                       [--artifacts DIR] [--out DIR]
   splitfed profile    [--artifacts DIR]
   splitfed inspect    [--artifacts DIR]
 
+Exit codes: 0 ok, 1 unexpected, 2 config, 3 contract, 4 fault-tolerance.
 Run `make artifacts` first to build the AOT artifacts.";
 
 fn main() -> ExitCode {
@@ -44,7 +52,11 @@ fn main() -> ExitCode {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
             eprintln!("error: {e:#}");
-            ExitCode::FAILURE
+            // typed errors carry a stable exit code for scripting
+            match e.downcast_ref::<SplitFedError>() {
+                Some(t) => ExitCode::from(t.exit_code()),
+                None => ExitCode::FAILURE,
+            }
         }
     }
 }
@@ -93,6 +105,21 @@ fn cmd_train(args: &Args, artifacts: &Path, out: &Path) -> anyhow::Result<()> {
     println!("  test accuracy: {:.3}", r.test_acc);
     println!("  avg round:     {:.1}s (virtual)", r.avg_round_s());
     println!("  wall clock:    {:.1}s", r.wall_s);
+    if cfg.fault.active() {
+        let (p, d, rt, fo, vc) = r.records.iter().fold((0, 0, 0, 0, 0), |acc, rec| {
+            (
+                acc.0 + rec.participants,
+                acc.1 + rec.dropped,
+                acc.2 + rec.retries,
+                acc.3 + rec.failovers,
+                acc.4 + rec.view_changes,
+            )
+        });
+        println!(
+            "  faults:        participants={p} dropped={d} retries={rt} \
+             failovers={fo} view_changes={vc}"
+        );
+    }
     println!("  results:       {}/{name}.json", out.display());
     Ok(())
 }
@@ -130,6 +157,10 @@ fn cmd_experiment(args: &Args, artifacts: &Path, out: &Path) -> anyhow::Result<(
         "ablation-topk" => {
             let r = exp::ablation_topk(&h, scale, seed)?;
             exp::save_all(&h, "ablation_topk", &r)?;
+        }
+        "fault-sweep" => {
+            let r = exp::fault_sweep(&h, scale, seed)?;
+            exp::save_all(&h, "fault_sweep", &r)?;
         }
         other => anyhow::bail!("unknown experiment `{other}`\n\n{USAGE}"),
     }

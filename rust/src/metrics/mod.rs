@@ -22,6 +22,17 @@ pub struct RoundRecord {
     pub cum_s: f64,
     /// Mean training loss observed during the round.
     pub train_loss: f64,
+    /// Clients whose updates the round accepted (fault model; equals the
+    /// full client count on fault-free runs).
+    pub participants: usize,
+    /// Clients offline or timed out this round.
+    pub dropped: usize,
+    /// Report retransmissions charged this round.
+    pub retries: usize,
+    /// Clients reassigned after a shard-server crash.
+    pub failovers: usize,
+    /// Committee view-changes recorded on-chain this round.
+    pub view_changes: usize,
 }
 
 /// A finished experiment run.
@@ -84,6 +95,7 @@ impl RunResult {
                     ("model_update", num(self.traffic.bytes(MsgKind::ModelUpdate) as f64)),
                     ("chain_tx", num(self.traffic.bytes(MsgKind::ChainTx) as f64)),
                     ("block", num(self.traffic.bytes(MsgKind::Block) as f64)),
+                    ("retransmit", num(self.traffic.bytes(MsgKind::Retransmit) as f64)),
                 ]),
             ),
             (
@@ -96,6 +108,11 @@ impl RunResult {
                         ("train_loss", num(r.train_loss)),
                         ("round_s", num(r.round_s)),
                         ("cum_s", num(r.cum_s)),
+                        ("participants", num(r.participants as f64)),
+                        ("dropped", num(r.dropped as f64)),
+                        ("retries", num(r.retries as f64)),
+                        ("failovers", num(r.failovers as f64)),
+                        ("view_changes", num(r.view_changes as f64)),
                     ])
                 })),
             ),
@@ -108,12 +125,25 @@ impl RunResult {
             std::fs::create_dir_all(parent)?;
         }
         let mut f = std::fs::File::create(path)?;
-        writeln!(f, "round,val_loss,val_acc,train_loss,round_s,cum_s")?;
+        writeln!(
+            f,
+            "round,val_loss,val_acc,train_loss,round_s,cum_s,participants,dropped,retries,failovers,view_changes"
+        )?;
         for r in &self.records {
             writeln!(
                 f,
-                "{},{:.6},{:.6},{:.6},{:.3},{:.3}",
-                r.round, r.val_loss, r.val_acc, r.train_loss, r.round_s, r.cum_s
+                "{},{:.6},{:.6},{:.6},{:.3},{:.3},{},{},{},{},{}",
+                r.round,
+                r.val_loss,
+                r.val_acc,
+                r.train_loss,
+                r.round_s,
+                r.cum_s,
+                r.participants,
+                r.dropped,
+                r.retries,
+                r.failovers,
+                r.view_changes
             )?;
         }
         Ok(())
@@ -175,6 +205,11 @@ mod tests {
                     round_s,
                     cum_s: round_s,
                     train_loss: 1.2,
+                    participants: 8,
+                    dropped: 0,
+                    retries: 0,
+                    failovers: 0,
+                    view_changes: 0,
                 },
                 RoundRecord {
                     round: 1,
@@ -183,6 +218,11 @@ mod tests {
                     round_s,
                     cum_s: 2.0 * round_s,
                     train_loss: 0.9,
+                    participants: 7,
+                    dropped: 1,
+                    retries: 2,
+                    failovers: 0,
+                    view_changes: 0,
                 },
             ],
             test_loss,
@@ -238,11 +278,16 @@ mod tests {
         let r = run("bsfl", 0.3, 2.0);
         let j = r.to_json();
         assert_eq!(j.get("algo").unwrap().as_str().unwrap(), "bsfl");
-        assert_eq!(j.get("rounds").unwrap().as_arr().unwrap().len(), 2);
+        let rounds = j.get("rounds").unwrap().as_arr().unwrap();
+        assert_eq!(rounds.len(), 2);
+        // fault counters ride along in every round object
+        assert!(rounds[1].get("participants").is_some());
+        assert!(rounds[1].get("dropped").is_some());
         let p = std::env::temp_dir().join("splitfed_metrics_test.csv");
         r.write_csv(&p).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
         assert!(text.starts_with("round,val_loss"));
+        assert!(text.lines().next().unwrap().ends_with("view_changes"));
         assert_eq!(text.lines().count(), 3);
     }
 }

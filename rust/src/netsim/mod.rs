@@ -52,7 +52,19 @@ impl LinkModel {
     }
 
     /// Seconds to deliver `bytes`.
+    ///
+    /// A zero-bandwidth link saturates to latency-only (a degenerate
+    /// control-plane link) instead of producing inf/NaN that would
+    /// poison every downstream `max`/sum.
     pub fn transfer_s(&self, bytes: usize) -> f64 {
+        debug_assert!(
+            self.bandwidth_bps >= 0.0 && self.bandwidth_bps.is_finite(),
+            "negative/NaN bandwidth {}",
+            self.bandwidth_bps
+        );
+        if !(self.bandwidth_bps > 0.0) {
+            return self.latency_s.max(0.0);
+        }
         self.latency_s + bytes as f64 / self.bandwidth_bps
     }
 }
@@ -96,6 +108,8 @@ pub enum MsgKind {
     ChainTx,
     /// Block propagation among committee members.
     Block,
+    /// Retransmission of a lost message (fault injection).
+    Retransmit,
 }
 
 /// Byte/message accounting per category.
@@ -220,6 +234,73 @@ impl ShardSim {
         }
     }
 
+    /// Like [`ShardSim::round`] but with per-client fault-model inputs:
+    /// straggler slowdown multiplies the *client-side* compute and link
+    /// charges (the serial server step is unscaled — the server is not
+    /// the straggler), `extra_s` delays the client's first send (retry
+    /// backoff), and `batches = 0` models a client that occupies no
+    /// server time but still contributes its `extra_s` to the round
+    /// (the server waited out its timeouts).
+    ///
+    /// With all loads nominal (`slowdown = 1`, `extra_s = 0`) this
+    /// matches [`ShardSim::round`] numerically (not bitwise — the
+    /// fault-free orchestrator paths keep calling `round` directly).
+    pub fn round_with(&self, loads: &[ClientLoad]) -> ShardRound {
+        if loads.is_empty() {
+            return ShardRound::default();
+        }
+        debug_assert!(
+            loads
+                .iter()
+                .all(|l| l.slowdown >= 1.0 && l.slowdown.is_finite() && l.extra_s >= 0.0),
+            "bad client load"
+        );
+        let up = self.link.transfer_s(self.act_bytes);
+        let down = self.link.transfer_s(self.grad_bytes);
+
+        let mut ready: Vec<f64> = loads.iter().map(|l| l.extra_s.max(0.0)).collect();
+        let mut remaining: Vec<usize> = loads.iter().map(|l| l.batches).collect();
+        let mut done = ready.clone();
+        let mut server_free = 0.0f64;
+        let mut server_busy = 0.0f64;
+        let mut queue_wait = 0.0f64;
+        let mut total_batches = 0usize;
+
+        loop {
+            let mut next: Option<(usize, f64)> = None;
+            for (j, load) in loads.iter().enumerate() {
+                if remaining[j] > 0 {
+                    let sd = load.slowdown.max(1.0);
+                    let arrive = ready[j] + sd * (self.prof.client_fwd_s + up);
+                    if next.map(|(_, t)| arrive < t).unwrap_or(true) {
+                        next = Some((j, arrive));
+                    }
+                }
+            }
+            let (j, arrive) = match next {
+                Some(x) => x,
+                None => break,
+            };
+            let start = arrive.max(server_free);
+            queue_wait += start - arrive;
+            let finish = start + self.prof.server_step_s;
+            server_free = finish;
+            server_busy += self.prof.server_step_s;
+            total_batches += 1;
+            let sd = loads[j].slowdown.max(1.0);
+            let client_done = finish + sd * (down + self.prof.client_bwd_s);
+            ready[j] = client_done;
+            remaining[j] -= 1;
+            done[j] = client_done;
+        }
+
+        ShardRound {
+            round_s: done.iter().cloned().fold(0.0, f64::max),
+            server_busy_s: server_busy,
+            mean_queue_wait_s: queue_wait / total_batches.max(1) as f64,
+        }
+    }
+
     /// SL's strictly sequential variant: clients take turns; client j+1
     /// cannot start until client j finished all its batches and the
     /// client model has been relayed to it.
@@ -247,6 +328,42 @@ impl ShardSim {
             mean_queue_wait_s: 0.0,
         }
     }
+}
+
+/// Per-client workload for [`ShardSim::round_with`] (fault injection).
+#[derive(Clone, Copy, Debug)]
+pub struct ClientLoad {
+    /// Batches this client pushes through the server (0 = present but
+    /// contributes no work, e.g. it timed out after retries).
+    pub batches: usize,
+    /// Multiplier on client-side compute + link charges (1.0 = nominal,
+    /// >1 = straggler).
+    pub slowdown: f64,
+    /// Virtual seconds charged before the client's first send (retry
+    /// backoff).
+    pub extra_s: f64,
+}
+
+impl ClientLoad {
+    pub fn nominal(batches: usize) -> ClientLoad {
+        ClientLoad {
+            batches,
+            slowdown: 1.0,
+            extra_s: 0.0,
+        }
+    }
+}
+
+/// Total virtual seconds of exponential retry backoff after `lost`
+/// consecutive message losses: `timeout, 2*timeout, 4*timeout, ...`.
+pub fn retry_backoff_s(timeout_s: f64, lost: usize) -> f64 {
+    let mut total = 0.0;
+    let mut step = timeout_s.max(0.0);
+    for _ in 0..lost {
+        total += step;
+        step *= 2.0;
+    }
+    total
 }
 
 /// Combine parallel branch durations (shards running concurrently).
@@ -315,6 +432,109 @@ mod tests {
         let sharded = parallel(&vec![s.round(5, 10).round_s; 6]);
         let speedup = single / sharded;
         assert!(speedup > 3.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn zero_bandwidth_link_saturates_to_latency() {
+        let l = LinkModel {
+            latency_s: 0.01,
+            bandwidth_bps: 0.0,
+        };
+        let t = l.transfer_s(1_000_000);
+        assert!(t.is_finite());
+        assert!((t - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_shard_rounds_are_zero() {
+        let s = sim();
+        let r = s.round(0, 10);
+        assert_eq!(r.round_s, 0.0);
+        assert_eq!(r.server_busy_s, 0.0);
+        let r = s.round_with(&[]);
+        assert_eq!(r.round_s, 0.0);
+        let r = s.round_sequential(0, 10, 100);
+        assert_eq!(r.round_s, 0.0);
+    }
+
+    #[test]
+    fn round_with_nominal_matches_round() {
+        let s = sim();
+        let base = s.round(4, 10);
+        let loads = vec![ClientLoad::nominal(10); 4];
+        let faulty = s.round_with(&loads);
+        assert!(
+            (base.round_s - faulty.round_s).abs() < 1e-9,
+            "{} vs {}",
+            base.round_s,
+            faulty.round_s
+        );
+        assert!((base.server_busy_s - faulty.server_busy_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_client_round_with_is_pipeline_sum() {
+        let s = sim();
+        let r = s.round_with(&[ClientLoad::nominal(10)]);
+        let up = s.link.transfer_s(s.act_bytes);
+        let down = s.link.transfer_s(s.grad_bytes);
+        let want = 10.0
+            * (s.prof.client_fwd_s + up + s.prof.server_step_s + down + s.prof.client_bwd_s);
+        assert!((r.round_s - want).abs() < 1e-9, "{} vs {}", r.round_s, want);
+    }
+
+    #[test]
+    fn all_straggler_round_is_slower_but_bounded() {
+        let s = sim();
+        let nominal = s.round_with(&vec![ClientLoad::nominal(10); 4]).round_s;
+        let slow = s
+            .round_with(&vec![
+                ClientLoad {
+                    batches: 10,
+                    slowdown: 4.0,
+                    extra_s: 0.0,
+                };
+                4
+            ])
+            .round_s;
+        // Client-side charges scale 4x but the server step does not.
+        assert!(slow > nominal, "{slow} vs {nominal}");
+        assert!(slow < nominal * 4.0 + 1e-9, "{slow} vs {nominal}");
+    }
+
+    #[test]
+    fn backoff_delays_round_completion() {
+        let s = sim();
+        let base = s.round_with(&vec![ClientLoad::nominal(5); 2]).round_s;
+        let delayed = s
+            .round_with(&[
+                ClientLoad::nominal(5),
+                ClientLoad {
+                    batches: 5,
+                    slowdown: 1.0,
+                    extra_s: 3.0,
+                },
+            ])
+            .round_s;
+        assert!(delayed >= base + 3.0 - 1e-9, "{delayed} vs {base}");
+        // A timed-out client (0 batches) still holds the round open for
+        // its backoff window.
+        let idle = s
+            .round_with(&[ClientLoad {
+                batches: 0,
+                slowdown: 1.0,
+                extra_s: 7.0,
+            }])
+            .round_s;
+        assert!((idle - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn retry_backoff_is_exponential() {
+        assert_eq!(retry_backoff_s(1.0, 0), 0.0);
+        assert!((retry_backoff_s(1.0, 1) - 1.0).abs() < 1e-12);
+        assert!((retry_backoff_s(1.0, 3) - 7.0).abs() < 1e-12);
+        assert!((retry_backoff_s(0.5, 2) - 1.5).abs() < 1e-12);
     }
 
     #[test]

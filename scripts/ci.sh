@@ -35,6 +35,36 @@ else
     echo "==> bench smoke (SPLITFED_BENCH_SCALE=smoke runtime_exec)"
     SPLITFED_BENCH_SCALE=smoke cargo bench --bench runtime_exec
     echo "    perf record: results/bench/runtime_exec/roundtime.json"
+
+    # Fault-matrix smoke: every algorithm must finish 2 rounds under 20%
+    # dropout; the sharded protocols additionally survive a shard-server
+    # crash, and BSFL a committee crash (quorum aggregation, failover,
+    # view-change).  Run JSON must surface the participation counters.
+    echo "==> fault-matrix smoke"
+    BIN=target/release/splitfed
+    FAULT_OUT=results/ci_fault
+    rm -rf "$FAULT_OUT"
+    run_fault() {
+        local name="$1"; shift
+        echo "    $name: $*"
+        "$BIN" train --rounds 2 --samples-per-node 48 --val-per-node 24 \
+            --test-samples 96 --out "$FAULT_OUT" "$@"
+        local json
+        json=$(ls "$FAULT_OUT"/*.json | head -n 1)
+        grep -q '"participants"' "$json" \
+            || { echo "    FAIL: $name output lacks participation metadata"; exit 1; }
+        rm -f "$FAULT_OUT"/*.json "$FAULT_OUT"/*.csv
+    }
+    for algo in sl sfl ssfl bsfl; do
+        run_fault "$algo+dropout" --algo "$algo" --fault-dropout 0.2
+    done
+    for algo in ssfl bsfl; do
+        run_fault "$algo+shard-crash" --algo "$algo" \
+            --fault-shard-crash 1 --fault-shard-crash-id 1
+    done
+    run_fault "bsfl+committee-crash" --algo bsfl \
+        --fault-committee-crash 1 --fault-committee-crash-slot 0
+    echo "    fault-matrix OK"
 fi
 
 echo "==> CI OK"
