@@ -1,25 +1,28 @@
 //! Microbench — per-entry PJRT execution latency (the §Perf evidence for
-//! Layer 3: how much time is XLA compute vs coordinator overhead), plus
-//! the serial-vs-parallel shard execution phase that tracks the perf
+//! Layer 3: how much time is XLA compute vs coordinator overhead), the
+//! device-resident vs host-literal weight path comparison, and the
+//! serial-vs-parallel shard execution phase that tracks the perf
 //! trajectory of wall-clock sharding.
 //!
-//! Reports mean/min/max per entry point over repeated executions, the L3
-//! overhead of a full SSFL round (everything that is not `execute`), and
-//! `threads=1` vs `threads=N` round wall time for a 4-shard SSFL run —
-//! written as JSON under `results/bench/runtime_exec/` so successive PRs
-//! can compare.
+//! Reports mean/min/max and host↔device transfer bytes per entry point
+//! over repeated executions, the L3 overhead of a full SSFL round
+//! (everything that is not `execute`), steady-state per-step latency and
+//! transfer bytes on both weight paths (buffer-path weight bytes must be
+//! ~0), and `threads=1` vs `threads=N` round wall time for a 4-shard
+//! SSFL run — written as JSON under `results/bench/runtime_exec/` so
+//! successive PRs can compare.
 
 mod bench_common;
 
 use std::path::Path;
 use std::time::Instant;
 
-use splitfed::algos::common::TrainCtx;
+use splitfed::algos::common::{hex_digest, TrainCtx};
 use splitfed::config::{Algo, ExpConfig};
 use splitfed::data::synthetic;
 use splitfed::metrics::RunResult;
 use splitfed::netsim::ComputeProfile;
-use splitfed::runtime::{ModelOps, Runtime};
+use splitfed::runtime::{ModelOps, Runtime, WEIGHT_SYNC, WEIGHT_UPLOAD};
 use splitfed::util::json::{num, obj, s, Json};
 use splitfed::util::pool;
 
@@ -49,9 +52,21 @@ fn main() -> anyhow::Result<()> {
     ops.evaluate(&client, &server, &ds)?;
 
     println!("per-entry PJRT latency over {iters} iters (train batch = {}):", ops.train_batch_size());
-    println!("{:<20} {:>8} {:>12}", "entry", "calls", "mean_ms");
+    println!(
+        "{:<20} {:>8} {:>10} {:>10} {:>10} {:>12} {:>12}",
+        "entry", "calls", "mean_ms", "min_ms", "max_ms", "h2d_bytes", "d2h_bytes"
+    );
     for (name, t) in rt.timing() {
-        println!("{:<20} {:>8} {:>12.2}", name, t.calls, t.mean_s() * 1e3);
+        println!(
+            "{:<20} {:>8} {:>10.2} {:>10.2} {:>10.2} {:>12} {:>12}",
+            name,
+            t.calls,
+            t.mean_s() * 1e3,
+            t.min_s * 1e3,
+            t.max_s * 1e3,
+            t.h2d_bytes,
+            t.d2h_bytes
+        );
     }
 
     // L3 overhead measurement: full SSFL round wall time vs time inside
@@ -78,6 +93,52 @@ fn main() -> anyhow::Result<()> {
     println!("  inside execute  {:>8.2} s ({:.1}%)", inside, 100.0 * inside / wall);
     println!("  L3 overhead     {:>8.2} s ({:.1}%)", wall - inside, 100.0 * (wall - inside) / wall);
     println!("\ntarget (DESIGN.md §Perf): overhead < 10% of wall");
+
+    // ---- device-resident vs host-literal weight path ---------------------
+    // The tentpole measurement: N steady-state train steps with weights
+    // staged once on device vs the literal reference path.  On the
+    // buffer path the per-step host traffic is batch + lr + 3 scalar
+    // stats only; weight traffic (WEIGHT_UPLOAD h2d + WEIGHT_SYNC d2h)
+    // inside the measured loop must be ~0 — weights are uploaded before
+    // and synced after.
+    let steps = 50usize;
+    let steady = |device: bool| -> anyhow::Result<(f64, u64, u64, String)> {
+        let mops = ModelOps::with_weight_residency(&rt, device);
+        let (client, server) = mops.init_models()?;
+        let mut cdev = mops.stage_owned(client)?;
+        let mut sdev = mops.stage_owned(server)?;
+        mops.train_step(&mut cdev, &mut sdev, &batch, 0.01)?; // warm
+        rt.reset_timing();
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            mops.train_step(&mut cdev, &mut sdev, &batch, 0.01)?;
+        }
+        let step_s = t0.elapsed().as_secs_f64() / steps as f64;
+        let (h2d, d2h) = rt.transfer_totals();
+        let timing = rt.timing();
+        let weight_bytes: u64 = [WEIGHT_UPLOAD, WEIGHT_SYNC]
+            .iter()
+            .filter_map(|n| timing.get(*n))
+            .map(|t| t.h2d_bytes + t.d2h_bytes)
+            .sum();
+        // sync happens here, OUTSIDE the measured steady-state window —
+        // that is the lazy boundary cost, paid once per round
+        let cb = cdev.into_bundle(&rt)?;
+        let sb = sdev.into_bundle(&rt)?;
+        let digest = format!("{}:{}", hex_digest(&cb.digest()), hex_digest(&sb.digest()));
+        Ok((step_s, (h2d + d2h) / steps as u64, weight_bytes / steps as u64, digest))
+    };
+    let (lit_step_s, lit_bytes_step, _, lit_digest) = steady(false)?;
+    let (dev_step_s, dev_bytes_step, dev_weight_bytes_step, dev_digest) = steady(true)?;
+    let paths_match = lit_digest == dev_digest;
+
+    println!("\ndevice-resident vs host-literal weights ({steps} steady-state steps):");
+    println!("  literal path   {:>8.2} ms/step  {:>10} transfer B/step", lit_step_s * 1e3, lit_bytes_step);
+    println!("  buffer path    {:>8.2} ms/step  {:>10} transfer B/step", dev_step_s * 1e3, dev_bytes_step);
+    println!("  buffer-path weight B/step {dev_weight_bytes_step}  (target ~0)");
+    println!("  step speedup   {:>8.2}x", lit_step_s / dev_step_s.max(1e-9));
+    println!("  digests match  {paths_match}");
+    anyhow::ensure!(paths_match, "literal vs buffer path diverged");
 
     // ---- serial vs parallel shard execution ------------------------------
     // 4 shards x 1 client (8 nodes): the smallest topology where the
@@ -145,6 +206,13 @@ fn main() -> anyhow::Result<()> {
         ("parallel_round_s", num(parallel_s / rounds as f64)),
         ("speedup", num(speedup)),
         ("digests_match", Json::Bool(digests_match)),
+        ("train_steps", num(steps as f64)),
+        ("literal_step_s", num(lit_step_s)),
+        ("device_step_s", num(dev_step_s)),
+        ("literal_transfer_bytes_per_step", num(lit_bytes_step as f64)),
+        ("host_transfer_bytes_per_step", num(dev_bytes_step as f64)),
+        ("weight_transfer_bytes_per_step", num(dev_weight_bytes_step as f64)),
+        ("device_literal_digests_match", Json::Bool(paths_match)),
     ]);
     std::fs::write(out_dir.join("roundtime.json"), doc.to_string())?;
     println!("  wrote {}", out_dir.join("roundtime.json").display());

@@ -3,6 +3,12 @@
 //! SFL/SSFL aggregate with plain FedAvg (paper Algorithm 1 lines 13-14,
 //! 26-28); BSFL aggregates only the committee-selected top-K updates
 //! (Algorithm 3 lines 44-47).
+//!
+//! Aggregation is a **host boundary** of the device-resident weight
+//! path: every [`Bundle`] arriving here is a synced host view
+//! (`runtime::DeviceBundle::into_bundle` at the end of each
+//! client-round / shard cycle), so these functions stay residency-
+//! agnostic — pure host math, no PJRT types.
 
 use anyhow::{bail, Result};
 

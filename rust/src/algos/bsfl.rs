@@ -366,6 +366,12 @@ pub fn run_with_ctx(
                             Some(m) => m,
                             None => continue,
                         };
+                        // The judged shard's server model is staged once
+                        // and reused across every member model it is
+                        // scored with (J evaluations per shard instead of
+                        // J × eval-batches weight uploads); each client
+                        // model is staged once for its sweep.
+                        let sdev = ops.stage(sm)?;
                         let mut losses: Vec<f64> = Vec::new();
                         for (cm, &p) in shard_client_models_ref[shard]
                             .iter()
@@ -374,7 +380,8 @@ pub fn run_with_ctx(
                             if !p {
                                 continue;
                             }
-                            let ev = ops.evaluate(cm, sm, &judge.val)?;
+                            let cdev = ops.stage(cm)?;
+                            let ev = ops.evaluate_staged(&cdev, &sdev, &judge.val)?;
                             losses.push(ev.loss);
                         }
                         if !losses.is_empty() {

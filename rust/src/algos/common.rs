@@ -1,9 +1,17 @@
 //! Shared round engine: real PJRT numerics + virtual-time accounting.
 //!
 //! Every algorithm trains through [`train_client_on_server_copy`] /
-//! [`run_shard_round`], so loss curves across SL/SFL/SSFL/BSFL differ
-//! only by coordination (sequential vs parallel vs sharded vs
-//! committee-filtered aggregation) — the comparison the paper makes.
+//! [`train_client_on_staged_server`] / [`run_shard_round`], so loss
+//! curves across SL/SFL/SSFL/BSFL differ only by coordination
+//! (sequential vs parallel vs sharded vs committee-filtered
+//! aggregation) — the comparison the paper makes.
+//!
+//! Weights are device-resident for the duration of each client-round
+//! (see `runtime::device`): the round loops stage bundles onto the PJRT
+//! device, step on buffer args, and sync host views back only at the
+//! aggregation / digest / shipping boundaries in this module — which is
+//! why `aggregation::fedavg`, `push_round_record`, and `finish_run`
+//! still operate on plain host [`Bundle`]s.
 //!
 //! ## Threading model
 //!
@@ -35,7 +43,7 @@ use crate::netsim::{
     retry_backoff_s, ClientLoad, ComputeProfile, LinkModel, MsgKind, ShardSim, Traffic,
 };
 use crate::nodes::{build_nodes, Node};
-use crate::runtime::{ModelOps, StepStats};
+use crate::runtime::{DeviceBundle, ModelOps, StepStats};
 use crate::tensor::Bundle;
 use crate::util::rng::Rng;
 
@@ -183,25 +191,55 @@ impl ShardCtx<'_> {
 /// model (Algorithm 1: the shard server keeps `W^S_{i,j}` per client).
 /// Updates `client` and `server_copy` in place; returns accumulated
 /// stats.
+///
+/// Both bundles are staged on device for the whole client-round and
+/// synced back before returning, so per-batch host↔device traffic is
+/// just the batch + scalar stats (see `runtime::device`).  Training
+/// errors are fatal run-aborts throughout this crate, so the moved-out
+/// bundles are only restored on the success path.
 pub fn train_client_on_server_copy(
     ctx: &mut ShardCtx<'_>,
     client: &mut Bundle,
     server_copy: &mut Bundle,
     node: &Node,
 ) -> Result<StepStats> {
+    let mut sdev = ctx
+        .ops
+        .stage_owned(std::mem::replace(server_copy, Bundle::empty()))?;
+    let stats = train_client_on_staged_server(ctx, client, &mut sdev, node)?;
+    *server_copy = sdev.into_bundle(ctx.ops.runtime())?;
+    Ok(stats)
+}
+
+/// Like [`train_client_on_server_copy`], but against a server model the
+/// caller already staged — the SL ring and the interleaved SplitFed
+/// round keep one *shared* server resident on device across every
+/// client's batches, uploading it once per round instead of once per
+/// client.  The client bundle is staged here and synced back before
+/// returning; the server stays staged (and possibly host-stale) for the
+/// next client.
+pub fn train_client_on_staged_server(
+    ctx: &mut ShardCtx<'_>,
+    client: &mut Bundle,
+    server: &mut DeviceBundle,
+    node: &Node,
+) -> Result<StepStats> {
     let mut stats = StepStats::default();
     let b = ctx.ops.train_batch_size();
+    let mut cdev = ctx
+        .ops
+        .stage_owned(std::mem::replace(client, Bundle::empty()))?;
     for _ in 0..ctx.cfg.local_epochs {
         for batch in node.train.batches(b) {
-            // full_train_step == client_forward + server_train_step +
-            // client_backward (bit-identical; proven in
-            // rust/tests/runtime_smoke.rs) in one PJRT call.
-            let st = ctx
-                .ops
-                .full_train_step(client, server_copy, &batch, ctx.cfg.lr)?;
+            // train_step == client_forward + server_train_step +
+            // client_backward in one PJRT call, on device-resident
+            // weights (bit-identical to the split literal path; proven
+            // in rust/tests/runtime_smoke.rs + buffer_equivalence.rs).
+            let st = ctx.ops.train_step(&mut cdev, server, &batch, ctx.cfg.lr)?;
             stats.merge(st);
         }
     }
+    *client = cdev.into_bundle(ctx.ops.runtime())?;
     ctx.record_shard_traffic(ctx.batches_per_client(node));
     Ok(stats)
 }
@@ -452,25 +490,22 @@ pub fn run_interleaved_round(
 ) -> Result<(StepStats, f64, RoundFaults, Vec<bool>)> {
     assert_eq!(client_models.len(), clients.len());
     let mut stats = StepStats::default();
-    let b = ctx.ops.train_batch_size();
 
     if !plan.active() {
+        // The shared server model is uploaded once and stays on device
+        // while every client streams through it; it comes home exactly
+        // once, after the last client.
+        let mut server = ctx
+            .ops
+            .stage_owned(std::mem::replace(server_model, Bundle::empty()))?;
         let mut max_batches = 0usize;
         for (j, node) in clients.iter().enumerate() {
-            for _ in 0..ctx.cfg.local_epochs {
-                for batch in node.train.batches(b) {
-                    let st = ctx.ops.full_train_step(
-                        &mut client_models[j],
-                        server_model,
-                        &batch,
-                        ctx.cfg.lr,
-                    )?;
-                    stats.merge(st);
-                }
-            }
+            let st =
+                train_client_on_staged_server(ctx, &mut client_models[j], &mut server, node)?;
+            stats.merge(st);
             max_batches = max_batches.max(ctx.batches_per_client(node));
-            ctx.record_shard_traffic(ctx.batches_per_client(node));
         }
+        *server_model = server.into_bundle(ctx.ops.runtime())?;
 
         // clients compute in parallel; the serial server is the bottleneck
         let round = ctx.sim.round(clients.len(), max_batches);
@@ -489,23 +524,18 @@ pub fn run_interleaved_round(
     let (participated, faults) = classify_members(ctx, plan, round, clients, &[]);
     let quorum_met = faults.participants >= plan.quorum_needed(clients.len());
     if quorum_met {
+        let mut server = ctx
+            .ops
+            .stage_owned(std::mem::replace(server_model, Bundle::empty()))?;
         for (j, node) in clients.iter().enumerate() {
             if !participated[j] {
                 continue;
             }
-            for _ in 0..ctx.cfg.local_epochs {
-                for batch in node.train.batches(b) {
-                    let st = ctx.ops.full_train_step(
-                        &mut client_models[j],
-                        server_model,
-                        &batch,
-                        ctx.cfg.lr,
-                    )?;
-                    stats.merge(st);
-                }
-            }
-            ctx.record_shard_traffic(ctx.batches_per_client(node));
+            let st =
+                train_client_on_staged_server(ctx, &mut client_models[j], &mut server, node)?;
+            stats.merge(st);
         }
+        *server_model = server.into_bundle(ctx.ops.runtime())?;
     }
     let loads = fault_loads(ctx, plan, round, clients, &participated, &[], quorum_met);
     let round_s = ctx.sim.round_with(&loads).round_s;

@@ -6,6 +6,11 @@
 //! copies and the FL server FedAvgs the client models.  Fast in rounds,
 //! but the single SL server serializes all client batches — the
 //! scalability wall SSFL removes.
+//!
+//! The shared server model stays device-resident across the whole
+//! interleaved round (see `algos::common::run_interleaved_round`); the
+//! host views this file aggregates and ships are synced lazily at the
+//! round boundary.
 
 use anyhow::Result;
 

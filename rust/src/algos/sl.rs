@@ -15,9 +15,10 @@ use crate::fault::RoundFaults;
 use crate::metrics::RunResult;
 use crate::netsim::{retry_backoff_s, MsgKind};
 use crate::runtime::{ModelOps, StepStats};
+use crate::tensor::Bundle;
 
 use super::common::{
-    finish_run, make_nodes, push_round_record, train_client_on_server_copy, EarlyStop,
+    finish_run, make_nodes, push_round_record, train_client_on_staged_server, EarlyStop,
     TrainCtx,
 };
 
@@ -62,6 +63,13 @@ pub fn run_with_ctx(
         let active = ctx.fault.active();
         let mut faults = RoundFaults::default();
         let mut seq_s = 0.0f64;
+        // The SHARED server model rides on device across the whole ring
+        // (uploaded once per round, synced back once before evaluation);
+        // the client model is staged per turn — it relays client-to-
+        // client anyway, so its per-turn sync *is* the relay payload.
+        let mut sdev = ctx
+            .ops
+            .stage_owned(std::mem::replace(&mut server_model, Bundle::empty()))?;
         for node in clients {
             if active && ctx.fault.effectively_dropped(round, node.id) {
                 faults.dropped += 1;
@@ -88,12 +96,8 @@ pub fn run_with_ctx(
             }
             // sequential: the SHARED server model is updated in place —
             // no per-client copies in SL.
-            let st = train_client_on_server_copy(
-                &mut sctx,
-                &mut client_model,
-                &mut server_model,
-                node,
-            )?;
+            let st =
+                train_client_on_staged_server(&mut sctx, &mut client_model, &mut sdev, node)?;
             stats.merge(st);
             let batches = sctx.batches_per_client(node);
             batches_total += batches;
@@ -111,6 +115,7 @@ pub fn run_with_ctx(
             sctx.traffic
                 .record(MsgKind::ModelUpdate, client_model.wire_bytes());
         }
+        server_model = sdev.into_bundle(ctx.ops.runtime())?;
         ctx.absorb_shard(&sctx);
 
         let round_s = if active {

@@ -11,6 +11,12 @@
 //! models (Algorithm 1 lines 24-28).  Averaging the shard servers halves
 //! the server model's effective learning rate imbalance — the paper's fix
 //! for the scalability-induced performance collapse (§IV.B).
+//!
+//! Inside each shard cycle, weights are device-resident per client-round
+//! (`algos::common::train_client_on_server_copy` stages both halves);
+//! every bundle this file sees — shard outputs, FedAvg inputs, shipped
+//! models — is already a synced host view, so the aggregation layer is
+//! residency-agnostic.
 
 use anyhow::Result;
 

@@ -56,6 +56,12 @@
 //!   (never cloned) into weight bundles, argument vectors are allocated
 //!   once at final size, and dataset evaluation fills a reused scratch
 //!   batch from contiguous row ranges.
+//! * Weights are **device-resident** across all batches of a round:
+//!   [`runtime::DeviceBundle`] stages a model half as `PjRtBuffer`s,
+//!   [`runtime::Runtime::execute_buffers`] steps on buffer args, and
+//!   the host mirror is synced lazily at aggregation/digest boundaries.
+//!   Residency is numerics-neutral (`rust/tests/buffer_equivalence.rs`);
+//!   `SPLITFED_HOST_LITERALS=1` forces the literal reference path.
 
 pub mod aggregation;
 pub mod algos;

@@ -79,7 +79,10 @@ pub struct ComputeProfile {
     pub client_bwd_s: f64,
     /// server_train_step on one train batch.
     pub server_step_s: f64,
-    /// evaluate on one eval batch.
+    /// One evaluation batch, call-weighted across every evaluate
+    /// variant the profiler ran (`evaluate` + `evaluate_small`) — tiny
+    /// validation sets route entirely through the small executable, and
+    /// its timing must still land here rather than being invented.
     pub eval_batch_s: f64,
 }
 

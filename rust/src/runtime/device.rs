@@ -1,0 +1,176 @@
+//! Device-resident weight bundles with lazy host sync.
+//!
+//! A [`DeviceBundle`] is one model half staged for training: a host
+//! [`Bundle`] mirror plus (in device mode) one `PjRtBuffer` per weight
+//! tensor.  Train steps swap fresh output buffers in with [`adopt`] —
+//! no host transfer — and mark the mirror stale; the host view is
+//! rebuilt **lazily**, only at the boundaries that genuinely need host
+//! bytes: FedAvg aggregation, model digests, committee-scoring
+//! serialization, and netsim byte accounting all read the synced
+//! [`Bundle`] and keep working unchanged.
+//!
+//! In host mode (`SPLITFED_HOST_LITERALS=1`, or
+//! `ModelOps::with_weight_residency(rt, false)`) the device side is
+//! absent and the mirror is always current — `ModelOps` then routes
+//! steps through the literal path, which is what the buffer-path
+//! equivalence tests diff against.
+//!
+//! Like [`replace_all`], [`adopt`] and [`sync`] are atomic on error:
+//! validation happens before any state is touched, so a failed call can
+//! never leave a half-old/half-new weight set behind.
+//!
+//! [`adopt`]: DeviceBundle::adopt
+//! [`sync`]: DeviceBundle::sync
+//! [`replace_all`]: super::model
+//!
+//! ## Threading
+//!
+//! `DeviceBundle` is `Send` (moved into pool workers with the shard that
+//! owns it) but deliberately not `Sync`: one shard mutates one bundle.
+//! All device operations go through the shared [`Runtime`], whose
+//! client-level thread-safety contract (see `exec.rs`) covers buffer
+//! creation, execution, and literal reads alike.
+
+use anyhow::{bail, Result};
+
+use super::exec::{Runtime, WEIGHT_SYNC, WEIGHT_UPLOAD};
+use crate::tensor::{Bundle, Tensor};
+
+/// One model half's weights, host-mirrored and (in device mode)
+/// resident on the PJRT device across train steps.
+pub struct DeviceBundle {
+    /// Host mirror; authoritative in host mode or when `!host_stale`.
+    host: Bundle,
+    /// Device-resident weights, one buffer per tensor in bundle order;
+    /// `None` = host mode (literal-path fallback).
+    device: Option<Vec<xla::PjRtBuffer>>,
+    /// True when the device side has advanced past the mirror (steps
+    /// have been adopted since the last sync).  Never true in host mode.
+    host_stale: bool,
+}
+
+// SAFETY: `xla::PjRtBuffer` holds raw pointers, so Send is not
+// auto-derived.  A DeviceBundle is only ever mutated by the single
+// shard/thread that owns it, and every device operation is funneled
+// through the shared `Runtime`, whose PJRT client contract makes buffer
+// use from any one thread at a time safe (the same contract that backs
+// `unsafe impl Send + Sync for Runtime`).
+unsafe impl Send for DeviceBundle {}
+
+impl DeviceBundle {
+    /// Stage `host` for training: upload every tensor when `on_device`
+    /// (tallied under [`WEIGHT_UPLOAD`]), or keep it host-resident for
+    /// the literal path.
+    pub fn from_host(rt: &Runtime, host: Bundle, on_device: bool) -> Result<DeviceBundle> {
+        let device = if on_device {
+            let mut bufs = Vec::with_capacity(host.len());
+            for t in host.tensors() {
+                bufs.push(rt.upload_tensor(WEIGHT_UPLOAD, t)?);
+            }
+            Some(bufs)
+        } else {
+            None
+        };
+        Ok(DeviceBundle {
+            host,
+            device,
+            host_stale: false,
+        })
+    }
+
+    /// Weights live on device (buffer path) rather than in the mirror.
+    pub fn on_device(&self) -> bool {
+        self.device.is_some()
+    }
+
+    /// The device buffers, bundle order — `None` in host mode.
+    pub fn buffers(&self) -> Option<&[xla::PjRtBuffer]> {
+        self.device.as_deref()
+    }
+
+    /// Number of weight tensors.
+    pub fn len(&self) -> usize {
+        self.host.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.host.is_empty()
+    }
+
+    /// The host mirror *without* syncing — names and shapes are always
+    /// valid (structure never changes), payloads only when
+    /// [`is_stale`](DeviceBundle::is_stale) is false.
+    pub fn host_structure(&self) -> &Bundle {
+        &self.host
+    }
+
+    /// The mirror lags the device side (an unsynced step has landed).
+    pub fn is_stale(&self) -> bool {
+        self.host_stale
+    }
+
+    /// Swap freshly-executed output buffers in as the new weights and
+    /// mark the mirror stale.  Count is validated before anything moves
+    /// (atomic on error); shapes are guaranteed by `execute_buffers`'
+    /// manifest check on the producing entry.
+    pub fn adopt(&mut self, fresh: Vec<xla::PjRtBuffer>) -> Result<()> {
+        let device = match self.device.as_mut() {
+            Some(d) => d,
+            None => bail!("adopt on a host-resident bundle"),
+        };
+        if fresh.len() != device.len() {
+            bail!("{} fresh buffers for {} weight slots", fresh.len(), device.len());
+        }
+        *device = fresh;
+        self.host_stale = true;
+        Ok(())
+    }
+
+    /// Bring the host mirror up to date (device→host, tallied under
+    /// [`WEIGHT_SYNC`]).  No-op when already current — the *lazy* in
+    /// lazy host sync: train loops adopt freely and only the round
+    /// boundaries that need host bytes pay for a transfer.
+    pub fn sync(&mut self, rt: &Runtime) -> Result<()> {
+        if !self.host_stale {
+            return Ok(());
+        }
+        let bufs = self
+            .device
+            .as_ref()
+            .expect("stale implies device-resident");
+        // Pull everything before touching the mirror so a failed read
+        // leaves the bundle fully untouched.
+        let mut fresh: Vec<Tensor> = Vec::with_capacity(bufs.len());
+        for (buf, old) in bufs.iter().zip(self.host.tensors()) {
+            fresh.push(rt.read_buffer(WEIGHT_SYNC, buf, old.shape().to_vec())?);
+        }
+        self.host.replace_tensors(fresh)?;
+        self.host_stale = false;
+        Ok(())
+    }
+
+    /// Synced host view (lazy: transfers only if a step landed since the
+    /// last sync).
+    pub fn bundle(&mut self, rt: &Runtime) -> Result<&Bundle> {
+        self.sync(rt)?;
+        Ok(&self.host)
+    }
+
+    /// Unstage: sync if needed and hand the host bundle back — the
+    /// boundary call for FedAvg, digesting, shipping, and storage.
+    pub fn into_bundle(mut self, rt: &Runtime) -> Result<Bundle> {
+        self.sync(rt)?;
+        Ok(self.host)
+    }
+
+    /// Mutable host mirror for the literal-path fallback.  Panics if the
+    /// weights are device-resident — host-mode only, enforced by
+    /// `ModelOps::train_step`'s dispatch.
+    pub(crate) fn host_mut(&mut self) -> &mut Bundle {
+        assert!(
+            self.device.is_none(),
+            "host_mut on a device-resident bundle"
+        );
+        &mut self.host
+    }
+}

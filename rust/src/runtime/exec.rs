@@ -1,14 +1,42 @@
-//! The PJRT execution engine.
+//! The PJRT execution engine — dual literal/buffer paths.
 //!
 //! `Runtime::load` creates one CPU PJRT client, parses the manifest, and
 //! compiles every `*.hlo.txt` once (HLO **text** interchange — see
-//! aot.py's module docstring for why not serialized protos).  `execute`
-//! packs `ArgValue`s into literals in manifest order, runs the
-//! executable, and unpacks the result tuple into [`Tensor`]s.
+//! aot.py's module docstring for why not serialized protos).
+//!
+//! Two execution paths share the compiled executables:
+//!
+//! * [`Runtime::execute`] — the **literal path**: packs [`ArgValue`]s
+//!   into fresh host literals in manifest order, runs the executable,
+//!   pulls the whole result tuple back to the host, and unpacks it into
+//!   [`Tensor`]s.  Every input crosses host→device and every output
+//!   crosses device→host, per call.  This is the reference path: simple,
+//!   allocation-per-call, and the numerics baseline the buffer path is
+//!   tested against.
+//! * [`Runtime::execute_buffers`] — the **buffer path**: arguments are
+//!   [`ExecArg`]s, each either a host slice (uploaded for this call) or
+//!   an existing device-resident [`xla::PjRtBuffer`]; results come back
+//!   as one `PjRtBuffer` per output leaf (the binding's `execute_b`
+//!   untuples on device) and are **not** synced to the host.  Callers
+//!   pull only the outputs they need via [`Runtime::read_buffer`] and
+//!   keep the rest — typically the updated weights — on device for the
+//!   next step.  This is what lets [`DeviceBundle`] hold a model's
+//!   weights device-resident across every batch of a round, shrinking
+//!   the per-step host transfer to batch data, the learning rate, and a
+//!   few scalar stats.
+//!
+//! Both paths produce **bit-identical** numerics: same executables, same
+//! input bytes, same op order — only the residency of the bytes differs
+//! (`rust/tests/buffer_equivalence.rs` asserts this end to end).
 //!
 //! Every execution is timed; [`Runtime::timing`] exposes cumulative
-//! per-entry stats, which both the netsim compute profile and the §Perf
-//! benchmarks consume.
+//! per-entry stats — call counts, mean/min/max latency, and host↔device
+//! transfer bytes (`h2d_bytes`/`d2h_bytes`) — which the netsim compute
+//! profile and the §Perf benchmarks consume.  Weight uploads and lazy
+//! weight syncs done by [`DeviceBundle`] are tallied under the pseudo
+//! entries [`WEIGHT_UPLOAD`] and [`WEIGHT_SYNC`], so `benches/
+//! runtime_exec.rs` can prove that steady-state weight traffic is ~0 on
+//! the buffer path.
 //!
 //! ## Thread safety
 //!
@@ -19,10 +47,12 @@
 //! argument/result buffers), and the CPU plugin honors that; the timing
 //! store — the only interior mutability on this type — is behind a
 //! `Mutex`.  If a PJRT backend ever misbehaves under concurrent
-//! `execute`, set `SPLITFED_SERIAL_EXEC=1` to serialize **all**
-//! executions through one client-wide lock (concurrency bugs in a PJRT
-//! plugin are client-level, so the hatch must not let two different
-//! entry points overlap either).
+//! execution, set `SPLITFED_SERIAL_EXEC=1` to serialize **all**
+//! executions — literal and buffer path alike — through one client-wide
+//! lock (concurrency bugs in a PJRT plugin are client-level, so the
+//! hatch must not let two different entry points overlap either).
+//!
+//! [`DeviceBundle`]: super::device::DeviceBundle
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -33,6 +63,16 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::manifest::{Dtype, Manifest, TensorSpec};
 use crate::tensor::Tensor;
+
+/// Pseudo entry name under which [`DeviceBundle`] weight uploads are
+/// tallied in [`Runtime::timing`].
+///
+/// [`DeviceBundle`]: super::device::DeviceBundle
+pub const WEIGHT_UPLOAD: &str = "weight_upload";
+
+/// Pseudo entry name under which lazy weight syncs (device→host) are
+/// tallied in [`Runtime::timing`].
+pub const WEIGHT_SYNC: &str = "weight_sync";
 
 /// A borrowed argument for one input slot.
 #[derive(Clone, Copy, Debug)]
@@ -55,13 +95,51 @@ impl ArgValue<'_> {
             ArgValue::I32(_) => Dtype::I32,
         }
     }
+
+    /// Bytes this argument moves across the PJRT boundary (both dtypes
+    /// are 4 bytes/element).
+    fn byte_len(&self) -> usize {
+        self.len() * 4
+    }
 }
 
-/// Cumulative wall-clock stats for one entry point.
-#[derive(Clone, Copy, Debug, Default)]
+/// One argument of a buffer-path execution: either a host slice uploaded
+/// for this call, or a buffer already resident on the device (weights,
+/// typically) that crosses no boundary at all.
+#[derive(Clone, Copy, Debug)]
+pub enum ExecArg<'a> {
+    Host(ArgValue<'a>),
+    Device(&'a xla::PjRtBuffer),
+}
+
+/// Cumulative wall-clock + host-transfer stats for one entry point.
+#[derive(Clone, Copy, Debug)]
 pub struct EntryTiming {
     pub calls: u64,
     pub total_s: f64,
+    /// Fastest single call (`INFINITY` until the first call lands).
+    pub min_s: f64,
+    /// Slowest single call.
+    pub max_s: f64,
+    /// Host→device bytes attributed to this entry (literal packs +
+    /// buffer-path uploads of `ExecArg::Host` slots).
+    pub h2d_bytes: u64,
+    /// Device→host bytes attributed to this entry (literal-path result
+    /// tuples + `read_buffer` pulls).
+    pub d2h_bytes: u64,
+}
+
+impl Default for EntryTiming {
+    fn default() -> EntryTiming {
+        EntryTiming {
+            calls: 0,
+            total_s: 0.0,
+            min_s: f64::INFINITY,
+            max_s: 0.0,
+            h2d_bytes: 0,
+            d2h_bytes: 0,
+        }
+    }
 }
 
 impl EntryTiming {
@@ -72,28 +150,42 @@ impl EntryTiming {
             self.total_s / self.calls as f64
         }
     }
+
+    fn record(&mut self, elapsed_s: f64, h2d: usize, d2h: usize) {
+        self.calls += 1;
+        self.total_s += elapsed_s;
+        self.min_s = self.min_s.min(elapsed_s);
+        self.max_s = self.max_s.max(elapsed_s);
+        self.h2d_bytes += h2d as u64;
+        self.d2h_bytes += d2h as u64;
+    }
 }
 
 /// One PJRT client + compiled executables for every manifest entry.
 pub struct Runtime {
+    /// Kept alive for the lifetime of every executable and buffer; also
+    /// the factory for buffer-path uploads.
+    client: xla::PjRtClient,
     manifest: Manifest,
     exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
     timing: Mutex<BTreeMap<String, EntryTiming>>,
     /// `Some` when `SPLITFED_SERIAL_EXEC=1`: a client-wide lock taken
-    /// around every `execute` — PJRT misbehavior under concurrency is a
-    /// client-level property, so the escape hatch serializes across
-    /// entry points, not per-executable.
+    /// around every execution (both paths) — PJRT misbehavior under
+    /// concurrency is a client-level property, so the escape hatch
+    /// serializes across entry points, not per-executable.
     serial: Option<Mutex<()>>,
 }
 
 // SAFETY: the xla wrapper types hold raw pointers, so Send/Sync are not
 // auto-derived, but the PJRT C API contract makes them safe to share:
 // `PJRT_LoadedExecutable_Execute` must support concurrent callers (each
-// call owns its argument literals and result buffers), compilation is
-// done once in `load` before any sharing, and the client itself is
-// stateless across executions.  All Rust-side mutable state (`timing`)
-// is Mutex-guarded.  `SPLITFED_SERIAL_EXEC=1` remains as an escape
-// hatch that serializes every execution through one client-wide lock.
+// call owns its argument literals and result buffers), buffer creation
+// and literal reads are likewise thread-compatible client operations,
+// compilation is done once in `load` before any sharing, and the client
+// itself is stateless across executions.  All Rust-side mutable state
+// (`timing`) is Mutex-guarded.  `SPLITFED_SERIAL_EXEC=1` remains as an
+// escape hatch that serializes every execution through one client-wide
+// lock.
 unsafe impl Send for Runtime {}
 unsafe impl Sync for Runtime {}
 
@@ -132,6 +224,7 @@ impl Runtime {
             crate::info!("SPLITFED_SERIAL_EXEC set: client-wide execution serialization on");
         }
         Ok(Runtime {
+            client,
             manifest,
             exes,
             timing: Mutex::new(BTreeMap::new()),
@@ -143,8 +236,9 @@ impl Runtime {
         &self.manifest
     }
 
-    /// Run `entry` with `args` (manifest input order). Returns output
-    /// tensors in manifest output order (all f32 by construction).
+    /// Run `entry` with `args` (manifest input order) on the literal
+    /// path. Returns output tensors in manifest output order (all f32 by
+    /// construction); every input and output crosses the host boundary.
     pub fn execute(&self, entry: &str, args: &[ArgValue<'_>]) -> Result<Vec<Tensor>> {
         let spec = self.manifest.entry(entry)?;
         let exe = self
@@ -160,8 +254,10 @@ impl Runtime {
         }
 
         let mut literals = Vec::with_capacity(args.len());
+        let mut h2d = 0usize;
         for (arg, ispec) in args.iter().zip(spec.inputs.iter()) {
             literals.push(pack(arg, ispec).with_context(|| format!("{entry}:{}", ispec.name))?);
+            h2d += arg.byte_len();
         }
 
         let t0 = Instant::now();
@@ -180,13 +276,8 @@ impl Runtime {
                 .to_literal_sync()
                 .map_err(|e| anyhow!("{entry}: to_literal: {e:?}"))?
         };
-        let elapsed = t0.elapsed().as_secs_f64();
-        {
-            let mut tm = self.timing.lock().unwrap_or_else(|e| e.into_inner());
-            let e = tm.entry(entry.to_string()).or_default();
-            e.calls += 1;
-            e.total_s += elapsed;
-        }
+        let d2h: usize = spec.outputs.iter().map(|o| o.elements() * 4).sum();
+        self.record(entry, t0.elapsed().as_secs_f64(), h2d, d2h);
 
         // aot.py lowers with return_tuple=True: always a tuple, even for
         // single outputs.
@@ -207,12 +298,162 @@ impl Runtime {
             .collect()
     }
 
-    /// Cumulative per-entry timing (entry -> stats).
+    /// Run `entry` on the buffer path: device args pass straight
+    /// through, host args are uploaded for this call only, and the
+    /// outputs come back as one device buffer per leaf — nothing is
+    /// synced to the host.
+    ///
+    /// The binding's `execute_b` runs with untupled results (PJRT
+    /// aliases the result tuple's leaves to separate buffers on device),
+    /// so unlike the literal path there is no host-side tuple decompose:
+    /// output `i` of the returned vec is manifest output `i`.  Callers
+    /// pull scalars/activations with [`Runtime::read_buffer`] and feed
+    /// weight buffers back as `ExecArg::Device` on the next step.
+    pub fn execute_buffers(
+        &self,
+        entry: &str,
+        args: &[ExecArg<'_>],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let spec = self.manifest.entry(entry)?;
+        let exe = self
+            .exes
+            .get(entry)
+            .ok_or_else(|| anyhow!("no executable for {entry}"))?;
+        if args.len() != spec.inputs.len() {
+            bail!(
+                "{entry}: {} args for {} inputs",
+                args.len(),
+                spec.inputs.len()
+            );
+        }
+
+        // Upload host-side slots first (owning vec), then assemble the
+        // borrowed arg row — two passes because references into
+        // `uploads` must not alias a vec still being grown.
+        enum Slot<'a> {
+            Dev(&'a xla::PjRtBuffer),
+            Up(usize),
+        }
+        let mut uploads: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        let mut slots: Vec<Slot<'_>> = Vec::with_capacity(args.len());
+        let mut h2d = 0usize;
+        for (arg, ispec) in args.iter().zip(spec.inputs.iter()) {
+            match arg {
+                ExecArg::Device(b) => slots.push(Slot::Dev(b)),
+                ExecArg::Host(v) => {
+                    let buf = self
+                        .upload(v, ispec)
+                        .with_context(|| format!("{entry}:{}", ispec.name))?;
+                    h2d += v.byte_len();
+                    uploads.push(buf);
+                    slots.push(Slot::Up(uploads.len() - 1));
+                }
+            }
+        }
+        let row: Vec<&xla::PjRtBuffer> = slots
+            .iter()
+            .map(|s| match s {
+                Slot::Dev(b) => *b,
+                Slot::Up(i) => &uploads[*i],
+            })
+            .collect();
+
+        let t0 = Instant::now();
+        let outs = {
+            let _serial = self
+                .serial
+                .as_ref()
+                .map(|m| m.lock().unwrap_or_else(|e| e.into_inner()));
+            exe.execute_b(&row)
+                .map_err(|e| anyhow!("{entry}: execute_b failed: {e:?}"))?
+        };
+        // No device→host traffic here: outputs stay resident until a
+        // caller reads them.
+        self.record(entry, t0.elapsed().as_secs_f64(), h2d, 0);
+
+        let bufs = outs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{entry}: empty result"))?;
+        if bufs.len() != spec.outputs.len() {
+            bail!(
+                "{entry}: {} output buffers for {} specs",
+                bufs.len(),
+                spec.outputs.len()
+            );
+        }
+        Ok(bufs)
+    }
+
+    /// Upload one host tensor to the device, tallied (bytes + wall time)
+    /// under `label` — [`WEIGHT_UPLOAD`] for bundle staging.
+    pub fn upload_tensor(&self, label: &str, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let t0 = Instant::now();
+        let buf = self
+            .client
+            .buffer_from_host_buffer(t.data(), t.shape(), None)
+            .map_err(|e| anyhow!("{label}: upload {:?}: {e:?}", t.shape()))?;
+        self.record(label, t0.elapsed().as_secs_f64(), t.wire_bytes(), 0);
+        Ok(buf)
+    }
+
+    /// Pull one f32 buffer back to the host as a [`Tensor`] of `shape`,
+    /// tallied (bytes + wall time) under `label` — the entry name for
+    /// per-step scalar/activation reads, [`WEIGHT_SYNC`] for lazy bundle
+    /// syncs.
+    pub fn read_buffer(
+        &self,
+        label: &str,
+        buf: &xla::PjRtBuffer,
+        shape: Vec<usize>,
+    ) -> Result<Tensor> {
+        let t0 = Instant::now();
+        let v = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{label}: to_literal: {e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{label}: to_vec: {e:?}"))?;
+        let t = Tensor::new(shape, v)?;
+        self.record(label, t0.elapsed().as_secs_f64(), 0, t.wire_bytes());
+        Ok(t)
+    }
+
+    fn upload(&self, arg: &ArgValue<'_>, spec: &TensorSpec) -> Result<xla::PjRtBuffer> {
+        check_arg(arg, spec)?;
+        match arg {
+            ArgValue::F32(s) => self.client.buffer_from_host_buffer(s, &spec.shape, None),
+            ArgValue::I32(s) => self.client.buffer_from_host_buffer(s, &spec.shape, None),
+        }
+        .map_err(|e| anyhow!("upload: {e:?}"))
+    }
+
+    fn record(&self, entry: &str, elapsed_s: f64, h2d: usize, d2h: usize) {
+        self.timing
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .entry(entry.to_string())
+            .or_default()
+            .record(elapsed_s, h2d, d2h);
+    }
+
+    /// Cumulative per-entry timing (entry -> stats).  Includes the
+    /// [`WEIGHT_UPLOAD`] / [`WEIGHT_SYNC`] pseudo entries once the
+    /// buffer path has run.
     pub fn timing(&self) -> BTreeMap<String, EntryTiming> {
         self.timing
             .lock()
             .unwrap_or_else(|e| e.into_inner())
             .clone()
+    }
+
+    /// Total host↔device traffic so far: `(h2d_bytes, d2h_bytes)` summed
+    /// over every entry (pseudo entries included).
+    pub fn transfer_totals(&self) -> (u64, u64) {
+        self.timing
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .values()
+            .fold((0, 0), |(h, d), e| (h + e.h2d_bytes, d + e.d2h_bytes))
     }
 
     /// Reset the timing accumulators (between §Perf bench phases).
@@ -224,7 +465,7 @@ impl Runtime {
     }
 }
 
-fn pack(arg: &ArgValue<'_>, spec: &TensorSpec) -> Result<xla::Literal> {
+fn check_arg(arg: &ArgValue<'_>, spec: &TensorSpec) -> Result<()> {
     if arg.dtype() != spec.dtype {
         bail!("dtype mismatch (want {:?})", spec.dtype);
     }
@@ -236,6 +477,11 @@ fn pack(arg: &ArgValue<'_>, spec: &TensorSpec) -> Result<xla::Literal> {
             spec.elements()
         );
     }
+    Ok(())
+}
+
+fn pack(arg: &ArgValue<'_>, spec: &TensorSpec) -> Result<xla::Literal> {
+    check_arg(arg, spec)?;
     let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
     let lit = match arg {
         ArgValue::F32(s) => xla::Literal::vec1(s),

@@ -3,19 +3,26 @@
 //! * [`manifest`] — parses `artifacts/manifest.json` (entry points, tensor
 //!   specs, init weights); everything downstream is manifest-driven.
 //! * [`exec`] — the [`Runtime`]: one PJRT CPU client, one compiled
-//!   executable per entry point, typed pack/unpack between [`Tensor`]s
-//!   and XLA literals, and per-entry timing stats.
-//! * [`model`] — [`ModelOps`]: the five split-model operations
+//!   executable per entry point, two execution paths (host literals and
+//!   device buffers — see the module docs), and per-entry timing stats
+//!   with host↔device transfer byte counters.
+//! * [`device`] — [`DeviceBundle`]: a model half staged on device for
+//!   the duration of a round, host-synced lazily at aggregation/digest
+//!   boundaries.
+//! * [`model`] — [`ModelOps`]: the split-model operations
 //!   (client_forward / server_train_step / client_backward / evaluate /
-//!   full_train_step) with weight bundles in and out, plus the compute
-//!   profiler that feeds netsim.
+//!   full_train_step, plus the staged train_step / evaluate_staged pair)
+//!   with weight bundles in and out, and the compute profiler that feeds
+//!   netsim.
 //!
 //! [`Tensor`]: crate::tensor::Tensor
 
+pub mod device;
 pub mod exec;
 pub mod manifest;
 pub mod model;
 
-pub use exec::{ArgValue, Runtime};
+pub use device::DeviceBundle;
+pub use exec::{ArgValue, EntryTiming, ExecArg, Runtime, WEIGHT_SYNC, WEIGHT_UPLOAD};
 pub use manifest::{Dtype, EntrySpec, Manifest, TensorSpec};
 pub use model::{EvalResult, ModelOps, StepStats};

@@ -4,10 +4,28 @@
 //! and data batches go in, updated bundles / activations / metrics come
 //! out.  It also derives netsim inputs (activation & gradient message
 //! sizes from the manifest, measured compute times from warm-up runs).
+//!
+//! ## Weight residency
+//!
+//! Training runs on one of two equivalent paths:
+//!
+//! * **Device-resident (default)** — [`ModelOps::stage`] uploads a
+//!   bundle's weights once, [`ModelOps::train_step`] executes with
+//!   buffer args and adopts the output weight buffers in place, and the
+//!   host only ever sees the batch (x/y/w), the learning rate, and
+//!   three scalar stats per step.  Weights come home lazily, at
+//!   [`DeviceBundle::into_bundle`] boundaries (FedAvg, digests,
+//!   shipping).
+//! * **Host literals** — the pre-buffer reference path
+//!   ([`ModelOps::full_train_step`] etc.), forced for a whole process
+//!   with `SPLITFED_HOST_LITERALS=1` or per-instance with
+//!   [`ModelOps::with_weight_residency`].  `rust/tests/
+//!   buffer_equivalence.rs` proves both paths bit-identical.
 
 use anyhow::{bail, Result};
 
-use super::exec::{ArgValue, Runtime};
+use super::device::DeviceBundle;
+use super::exec::{ArgValue, ExecArg, Runtime};
 use crate::data::{Batch, Dataset};
 use crate::netsim::ComputeProfile;
 use crate::tensor::{Bundle, Tensor};
@@ -47,15 +65,41 @@ pub struct EvalResult {
 /// The five split-model operations, typed over bundles and batches.
 pub struct ModelOps<'a> {
     rt: &'a Runtime,
+    /// Stage weights as device buffers (buffer path) rather than packing
+    /// host literals per step.
+    device_weights: bool,
 }
 
 impl<'a> ModelOps<'a> {
+    /// Default residency: device-resident weights, unless
+    /// `SPLITFED_HOST_LITERALS=1` forces the literal path (escape hatch
+    /// + A/B baseline).
     pub fn new(rt: &'a Runtime) -> ModelOps<'a> {
-        ModelOps { rt }
+        let host_literals = std::env::var("SPLITFED_HOST_LITERALS")
+            .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+            .unwrap_or(false);
+        if host_literals {
+            crate::info!("SPLITFED_HOST_LITERALS set: weight staging disabled (literal path)");
+        }
+        ModelOps {
+            rt,
+            device_weights: !host_literals,
+        }
+    }
+
+    /// Explicit residency — how the equivalence tests run both paths in
+    /// one process without racing on the environment.
+    pub fn with_weight_residency(rt: &'a Runtime, device_weights: bool) -> ModelOps<'a> {
+        ModelOps { rt, device_weights }
     }
 
     pub fn runtime(&self) -> &Runtime {
         self.rt
+    }
+
+    /// Whether [`stage`](ModelOps::stage) puts weights on device.
+    pub fn weights_on_device(&self) -> bool {
+        self.device_weights
     }
 
     pub fn train_batch_size(&self) -> usize {
@@ -114,6 +158,130 @@ impl<'a> ModelOps<'a> {
         da.elements() * 4
     }
 
+    // ---- staging (buffer path) ------------------------------------------
+
+    /// Stage a bundle for training under this instance's residency mode
+    /// (clones the host payload; prefer [`stage_owned`](ModelOps::
+    /// stage_owned) when the caller can give the bundle up).
+    pub fn stage(&self, host: &Bundle) -> Result<DeviceBundle> {
+        DeviceBundle::from_host(self.rt, host.clone(), self.device_weights)
+    }
+
+    /// Stage an owned bundle — no host copy; the round loops move their
+    /// working bundles in and take them back out via
+    /// [`DeviceBundle::into_bundle`].
+    pub fn stage_owned(&self, host: Bundle) -> Result<DeviceBundle> {
+        DeviceBundle::from_host(self.rt, host, self.device_weights)
+    }
+
+    /// One fused client+server SGD step on staged weights.  On the
+    /// buffer path the only host↔device traffic is the batch, the
+    /// learning rate, and the three scalar stats — the updated weights
+    /// stay on device for the next step.  On the literal path this is
+    /// exactly [`ModelOps::full_train_step`].
+    pub fn train_step(
+        &self,
+        client: &mut DeviceBundle,
+        server: &mut DeviceBundle,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<StepStats> {
+        match (client.on_device(), server.on_device()) {
+            (true, true) => self.train_step_device(client, server, batch, lr),
+            (false, false) => {
+                self.full_train_step(client.host_mut(), server.host_mut(), batch, lr)
+            }
+            _ => bail!("train_step: bundles staged under different residency modes"),
+        }
+    }
+
+    fn train_step_device(
+        &self,
+        client: &mut DeviceBundle,
+        server: &mut DeviceBundle,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<StepStats> {
+        let entry = "full_train_step";
+        let lr_arr = [lr];
+        let cbufs = client.buffers().expect("device-resident");
+        let sbufs = server.buffers().expect("device-resident");
+        let mut args: Vec<ExecArg> = Vec::with_capacity(cbufs.len() + sbufs.len() + 4);
+        for b in cbufs {
+            args.push(ExecArg::Device(b));
+        }
+        for b in sbufs {
+            args.push(ExecArg::Device(b));
+        }
+        args.push(ExecArg::Host(ArgValue::F32(&batch.x)));
+        args.push(ExecArg::Host(ArgValue::I32(&batch.y)));
+        args.push(ExecArg::Host(ArgValue::F32(&batch.w)));
+        args.push(ExecArg::Host(ArgValue::F32(&lr_arr)));
+        let mut out = self.rt.execute_buffers(entry, &args)?;
+
+        // Validate the full output split BEFORE adopting anything, so a
+        // manifest/bundle drift can never leave one bundle on the new
+        // step and the other on the old (the same no-mixed-steps
+        // invariant `replace_all` keeps on the literal path).
+        let want = 3 + client.len() + server.len();
+        if out.len() != want {
+            bail!("{entry}: {} output buffers for {} slots", out.len(), want);
+        }
+        let mut weights = out.split_off(3);
+        let stats = StepStats {
+            loss_sum: self.read_scalar(entry, &out[0])?,
+            correct_sum: self.read_scalar(entry, &out[1])?,
+            wsum: self.read_scalar(entry, &out[2])?,
+        };
+        let server_weights = weights.split_off(client.len());
+        client.adopt(weights)?;
+        server.adopt(server_weights)?;
+        Ok(stats)
+    }
+
+    /// Evaluate staged weights over a dataset without disturbing them —
+    /// buffer-path weights are read straight from the device (no sync),
+    /// host-mode bundles go through the literal path.
+    pub fn evaluate_staged(
+        &self,
+        client: &DeviceBundle,
+        server: &DeviceBundle,
+        ds: &Dataset,
+    ) -> Result<EvalResult> {
+        match (client.buffers(), server.buffers()) {
+            (Some(cbufs), Some(sbufs)) => self.eval_sweep(ds, |entry, batch| {
+                let mut args: Vec<ExecArg> =
+                    Vec::with_capacity(cbufs.len() + sbufs.len() + 3);
+                for b in cbufs {
+                    args.push(ExecArg::Device(b));
+                }
+                for b in sbufs {
+                    args.push(ExecArg::Device(b));
+                }
+                args.push(ExecArg::Host(ArgValue::F32(&batch.x)));
+                args.push(ExecArg::Host(ArgValue::I32(&batch.y)));
+                args.push(ExecArg::Host(ArgValue::F32(&batch.w)));
+                let out = self.rt.execute_buffers(entry, &args)?;
+                Ok((
+                    self.read_scalar(entry, &out[0])?,
+                    self.read_scalar(entry, &out[1])?,
+                    self.read_scalar(entry, &out[2])?,
+                ))
+            }),
+            (None, None) => {
+                self.evaluate(client.host_structure(), server.host_structure(), ds)
+            }
+            _ => bail!("evaluate_staged: bundles staged under different residency modes"),
+        }
+    }
+
+    fn read_scalar(&self, entry: &str, buf: &xla::PjRtBuffer) -> Result<f64> {
+        let t = self.rt.read_buffer(entry, buf, vec![])?;
+        Ok(t.data()[0] as f64)
+    }
+
+    // ---- literal path ---------------------------------------------------
+
     /// Client half forward: batch -> smashed activation A.
     pub fn client_forward(&self, client: &Bundle, batch: &Batch) -> Result<Tensor> {
         let mut args: Vec<ArgValue> = Vec::with_capacity(client.len() + 1);
@@ -170,7 +338,8 @@ impl<'a> ModelOps<'a> {
         Ok(())
     }
 
-    /// Fused client+server step (identical numerics to the split path;
+    /// Fused client+server step on host bundles (identical numerics to
+    /// the split path AND to [`ModelOps::train_step`]'s buffer path;
     /// used by the SL fast path and equivalence tests).
     ///
     /// Hot path: the output tensors are *moved* into the bundles
@@ -202,7 +371,7 @@ impl<'a> ModelOps<'a> {
         Ok(stats)
     }
 
-    /// Full-model evaluation over a dataset.
+    /// Full-model evaluation over a dataset (host-bundle literal path).
     ///
     /// Picks the executable whose batch shape wastes the least padding:
     /// datasets no larger than the small variant's batch run through
@@ -210,6 +379,29 @@ impl<'a> ModelOps<'a> {
     /// sets use the big batch and fall back to the small one for the
     /// tail when it fits.
     pub fn evaluate(&self, client: &Bundle, server: &Bundle, ds: &Dataset) -> Result<EvalResult> {
+        self.eval_sweep(ds, |entry, batch| {
+            let mut args: Vec<ArgValue> = Vec::with_capacity(client.len() + server.len() + 3);
+            bundle_args_into(&mut args, client);
+            bundle_args_into(&mut args, server);
+            args.push(ArgValue::F32(&batch.x));
+            args.push(ArgValue::I32(&batch.y));
+            args.push(ArgValue::F32(&batch.w));
+            let out = self.rt.execute(entry, &args)?;
+            let mut it = out.into_iter();
+            Ok((scalar(&mut it)?, scalar(&mut it)?, scalar(&mut it)?))
+        })
+    }
+
+    /// The shared evaluation sweep: chunk `ds` into contiguous row
+    /// ranges over a reused scratch batch (no index vector, no subset
+    /// dataset, no fresh buffers), pick the least-padding executable per
+    /// chunk, and let `run` execute it — on literals or buffers — and
+    /// return the (loss, correct, weight) sums.
+    fn eval_sweep(
+        &self,
+        ds: &Dataset,
+        mut run: impl FnMut(&str, &Batch) -> Result<(f64, f64, f64)>,
+    ) -> Result<EvalResult> {
         if ds.is_empty() {
             bail!("evaluate on empty dataset");
         }
@@ -219,24 +411,6 @@ impl<'a> ModelOps<'a> {
         let mut loss_sum = 0.0;
         let mut correct_sum = 0.0;
         let mut wsum = 0.0;
-        let mut run = |entry: &str, batch: &Batch| -> Result<()> {
-            let mut args: Vec<ArgValue> = Vec::with_capacity(client.len() + server.len() + 3);
-            bundle_args_into(&mut args, client);
-            bundle_args_into(&mut args, server);
-            args.push(ArgValue::F32(&batch.x));
-            args.push(ArgValue::I32(&batch.y));
-            args.push(ArgValue::F32(&batch.w));
-            let out = self.rt.execute(entry, &args)?;
-            let mut it = out.into_iter();
-            loss_sum += scalar(&mut it)?;
-            correct_sum += scalar(&mut it)?;
-            wsum += scalar(&mut it)?;
-            Ok(())
-        };
-
-        // One scratch batch reused across the whole sweep: each chunk is
-        // a contiguous row range filled in place (no index vector, no
-        // intermediate subset dataset, no fresh batch buffers).
         let mut scratch = Batch::empty();
         let mut pos = 0usize;
         while pos < ds.len() {
@@ -247,7 +421,10 @@ impl<'a> ModelOps<'a> {
             };
             let take = remaining.min(bsize);
             ds.fill_batch(pos, take, bsize, &mut scratch);
-            run(entry, &scratch)?;
+            let (l, c, w) = run(entry, &scratch)?;
+            loss_sum += l;
+            correct_sum += c;
+            wsum += w;
             pos += take;
         }
         Ok(EvalResult {
@@ -260,6 +437,13 @@ impl<'a> ModelOps<'a> {
     /// Measure per-entry compute times on dummy data (feeds netsim).
     /// `iters` >= 2 recommended: the first call after compile can be
     /// cold.
+    ///
+    /// `eval_batch_s` folds every evaluate variant (`evaluate` +
+    /// `evaluate_small`) into one call-weighted mean, so tiny datasets
+    /// routed entirely through the small executable still profile.  An
+    /// entry with no recorded calls is an error — a warning plus a
+    /// refusal, never an invented constant (the old silent `1e-3`
+    /// fallback fed netsim fiction).
     pub fn profile_compute(&self, iters: usize) -> Result<ComputeProfile> {
         let (mut client, mut server) = self.init_models()?;
         let b = self.train_batch_size();
@@ -274,13 +458,38 @@ impl<'a> ModelOps<'a> {
             self.evaluate(&client, &server, &ds)?;
         }
         let t = self.rt.timing();
-        let mean = |name: &str| t.get(name).map(|e| e.mean_s()).unwrap_or(1e-3);
-        Ok(ComputeProfile {
-            client_fwd_s: mean("client_forward"),
-            client_bwd_s: mean("client_backward"),
-            server_step_s: mean("server_train_step"),
-            eval_batch_s: mean("evaluate"),
-        })
+        let mean = |name: &str| {
+            t.get(name)
+                .filter(|e| e.calls > 0)
+                .map(|e| e.mean_s())
+        };
+        let eval_folded = {
+            let (calls, total) = ["evaluate", "evaluate_small"]
+                .iter()
+                .filter_map(|n| t.get(*n))
+                .fold((0u64, 0.0f64), |(c, s), e| (c + e.calls, s + e.total_s));
+            (calls > 0).then(|| total / calls as f64)
+        };
+
+        let mut missing: Vec<&str> = Vec::new();
+        let mut need = |name: &'static str, v: Option<f64>| match v {
+            Some(x) => x,
+            None => {
+                crate::warn_!("profile_compute: entry `{name}` never executed during profiling");
+                missing.push(name);
+                0.0
+            }
+        };
+        let prof = ComputeProfile {
+            client_fwd_s: need("client_forward", mean("client_forward")),
+            client_bwd_s: need("client_backward", mean("client_backward")),
+            server_step_s: need("server_train_step", mean("server_train_step")),
+            eval_batch_s: need("evaluate", eval_folded),
+        };
+        if !missing.is_empty() {
+            bail!("profile_compute: no timing recorded for {missing:?}");
+        }
+        Ok(prof)
     }
 }
 
@@ -308,7 +517,8 @@ fn scalar(it: &mut impl Iterator<Item = Tensor>) -> Result<f64> {
 /// Atomic on error: length and every shape are validated before any
 /// bundle is touched, so manifest/bundle drift can never leave a
 /// half-old/half-new weight set behind (callers today treat the error
-/// as fatal, but a future retry path must not train on mixed steps).
+/// as fatal, but a future retry path must not train on mixed steps) —
+/// asserted by the `replace_all_*` tests below.
 fn replace_all(bundles: &mut [&mut Bundle], new: Vec<Tensor>) -> Result<()> {
     let want: usize = bundles.iter().map(|b| b.len()).sum();
     if new.len() != want {
@@ -330,4 +540,64 @@ fn replace_all(bundles: &mut [&mut Bundle], new: Vec<Tensor>) -> Result<()> {
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bundle(name: &str, shapes: &[usize]) -> Bundle {
+        Bundle::new(
+            shapes
+                .iter()
+                .enumerate()
+                .map(|(i, _)| format!("{name}{i}"))
+                .collect(),
+            shapes
+                .iter()
+                .map(|&n| Tensor::new(vec![n], vec![1.0; n]).unwrap())
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    fn fresh(shapes: &[usize]) -> Vec<Tensor> {
+        shapes
+            .iter()
+            .map(|&n| Tensor::new(vec![n], vec![2.0; n]).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn replace_all_moves_across_bundles() {
+        let mut a = bundle("a", &[2, 3]);
+        let mut b = bundle("b", &[4]);
+        replace_all(&mut [&mut a, &mut b], fresh(&[2, 3, 4])).unwrap();
+        assert_eq!(a.tensors()[0].data(), &[2.0, 2.0]);
+        assert_eq!(b.tensors()[0].data(), &[2.0; 4]);
+    }
+
+    #[test]
+    fn replace_all_length_mismatch_leaves_bundles_untouched() {
+        let mut a = bundle("a", &[2, 3]);
+        let mut b = bundle("b", &[4]);
+        let (a0, b0) = (a.clone(), b.clone());
+        // one tensor short: validated before anything moves
+        assert!(replace_all(&mut [&mut a, &mut b], fresh(&[2, 3])).is_err());
+        assert_eq!(&a, &a0, "first bundle touched on length mismatch");
+        assert_eq!(&b, &b0, "second bundle touched on length mismatch");
+    }
+
+    #[test]
+    fn replace_all_shape_drift_leaves_bundles_untouched() {
+        let mut a = bundle("a", &[2, 3]);
+        let mut b = bundle("b", &[4]);
+        let (a0, b0) = (a.clone(), b.clone());
+        // drift in the LAST slot (bundle b): bundle a's slots validate
+        // clean first, and still must not be written — the documented
+        // no-mixed-steps invariant.
+        assert!(replace_all(&mut [&mut a, &mut b], fresh(&[2, 3, 5])).is_err());
+        assert_eq!(&a, &a0, "first bundle touched on later shape drift");
+        assert_eq!(&b, &b0, "second bundle touched on shape drift");
+    }
 }

@@ -24,6 +24,16 @@ impl Bundle {
         Ok(Bundle { names, tensors })
     }
 
+    /// Zero-tensor placeholder: what `std::mem::replace` leaves behind
+    /// when a bundle is moved into a device-staging call without
+    /// cloning its payload.
+    pub fn empty() -> Bundle {
+        Bundle {
+            names: Vec::new(),
+            tensors: Vec::new(),
+        }
+    }
+
     pub fn names(&self) -> &[String] {
         &self.names
     }
@@ -38,6 +48,23 @@ impl Bundle {
 
     pub fn into_tensors(self) -> Vec<Tensor> {
         self.tensors
+    }
+
+    /// Replace every tensor payload at once, keeping names.  Count and
+    /// all shapes are validated **before** anything moves, so an error
+    /// leaves the bundle fully untouched — the no-mixed-steps invariant
+    /// device sync and the runtime's `replace_all` rely on.
+    pub fn replace_tensors(&mut self, new: Vec<Tensor>) -> Result<()> {
+        if new.len() != self.tensors.len() {
+            bail!("{} new tensors for {} slots", new.len(), self.tensors.len());
+        }
+        for (old, fresh) in self.tensors.iter().zip(new.iter()) {
+            if old.shape() != fresh.shape() {
+                bail!("shape drift {:?} -> {:?}", old.shape(), fresh.shape());
+            }
+        }
+        self.tensors = new;
+        Ok(())
     }
 
     pub fn len(&self) -> usize {
@@ -180,6 +207,46 @@ mod tests {
         assert!(!a.same_structure(&other));
         let mut c = a.clone();
         assert!(c.axpy(1.0, &other).is_err());
+    }
+
+    #[test]
+    fn replace_tensors_swaps_payloads() {
+        let mut a = bundle(&[1.0, 2.0, 3.0]);
+        a.replace_tensors(vec![
+            Tensor::new(vec![2], vec![9.0, 8.0]).unwrap(),
+            Tensor::new(vec![1], vec![7.0]).unwrap(),
+        ])
+        .unwrap();
+        assert_eq!(a.tensors()[0].data(), &[9.0, 8.0]);
+        assert_eq!(a.tensors()[1].data(), &[7.0]);
+        assert_eq!(a.names(), &["w".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn replace_tensors_is_atomic_on_error() {
+        let before = bundle(&[1.0, 2.0, 3.0]);
+        // length mismatch: nothing moves
+        let mut a = before.clone();
+        assert!(a
+            .replace_tensors(vec![Tensor::new(vec![2], vec![9.0, 8.0]).unwrap()])
+            .is_err());
+        assert_eq!(&a, &before);
+        // shape drift in the SECOND slot: the first must stay untouched
+        let mut b = before.clone();
+        assert!(b
+            .replace_tensors(vec![
+                Tensor::new(vec![2], vec![9.0, 8.0]).unwrap(),
+                Tensor::new(vec![3], vec![0.0, 0.0, 0.0]).unwrap(),
+            ])
+            .is_err());
+        assert_eq!(&b, &before);
+    }
+
+    #[test]
+    fn empty_bundle() {
+        let e = Bundle::empty();
+        assert!(e.is_empty());
+        assert_eq!(e.param_count(), 0);
     }
 
     #[test]

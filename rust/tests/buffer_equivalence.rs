@@ -1,0 +1,195 @@
+//! Literal-path vs buffer-path equivalence: running the same training
+//! on host-literal args and on device-resident weight buffers must be
+//! **bit-identical** — per-step stats, evaluation sweeps, round records,
+//! and final model digests, at `threads=1` and `threads=4` alike, with
+//! `SPLITFED_SERIAL_EXEC` still honored.  Same executables, same input
+//! bytes, same op order: weight residency is a pure performance knob,
+//! never a numerics knob (the same contract `parallel_equivalence.rs`
+//! pins for thread count).
+//!
+//! Requires `make artifacts`; tests no-op otherwise (CI runs artifacts
+//! first).  Residency is selected per-instance via
+//! `ModelOps::with_weight_residency`, never via the environment, so the
+//! two paths can run in one process without racing.
+
+use std::path::PathBuf;
+
+use splitfed::algos::common::{hex_digest, TrainCtx};
+use splitfed::algos;
+use splitfed::config::{Algo, ExpConfig};
+use splitfed::data::synthetic;
+use splitfed::metrics::RunResult;
+use splitfed::netsim::ComputeProfile;
+use splitfed::runtime::{ModelOps, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("runtime load"))
+}
+
+/// Everything one staged training sweep produces, bit-comparable.
+struct SweepOut {
+    digest: String,
+    stats: Vec<(f64, f64, f64)>,
+    eval: (f64, f64),
+}
+
+/// A few staged train steps plus a staged evaluation, under the given
+/// residency, on a fixed seed.  The buffer path keeps weights on device
+/// across the whole loop; the literal path is the reference.
+fn staged_sweep(rt: &Runtime, device: bool) -> SweepOut {
+    let ops = ModelOps::with_weight_residency(rt, device);
+    let (client, server) = ops.init_models().unwrap();
+    let b = ops.train_batch_size();
+    let ds = synthetic::generate(4 * b, 0x5EED);
+    let mut cdev = ops.stage_owned(client).unwrap();
+    let mut sdev = ops.stage_owned(server).unwrap();
+    let mut stats = Vec::new();
+    for batch in ds.batches(b) {
+        let st = ops.train_step(&mut cdev, &mut sdev, &batch, 0.05).unwrap();
+        stats.push((st.loss_sum, st.correct_sum, st.wsum));
+    }
+    // evaluate mid-stream, while the weights are still staged (and, on
+    // the buffer path, host-stale) — reads must come from the device
+    let ev = ops.evaluate_staged(&cdev, &sdev, &ds).unwrap();
+    let cb = cdev.into_bundle(ops.runtime()).unwrap();
+    let sb = sdev.into_bundle(ops.runtime()).unwrap();
+    SweepOut {
+        digest: format!("{}:{}", hex_digest(&cb.digest()), hex_digest(&sb.digest())),
+        stats,
+        eval: (ev.loss, ev.accuracy),
+    }
+}
+
+fn assert_sweeps_identical(a: &SweepOut, b: &SweepOut, what: &str) {
+    assert_eq!(a.stats.len(), b.stats.len(), "{what}: step count");
+    for (i, (x, y)) in a.stats.iter().zip(b.stats.iter()).enumerate() {
+        // == on floats on purpose: the claim is bit-identity
+        assert!(x.0 == y.0, "{what}: step {i} loss_sum {} != {}", x.0, y.0);
+        assert!(x.1 == y.1, "{what}: step {i} correct_sum");
+        assert!(x.2 == y.2, "{what}: step {i} wsum");
+    }
+    assert!(a.eval.0 == b.eval.0, "{what}: eval loss {} != {}", a.eval.0, b.eval.0);
+    assert!(a.eval.1 == b.eval.1, "{what}: eval accuracy");
+    assert_eq!(a.digest, b.digest, "{what}: model digest");
+    assert!(!a.digest.is_empty(), "{what}: digest populated");
+}
+
+#[test]
+fn buffer_path_matches_literal_path_stepwise() {
+    let rt = match runtime() {
+        Some(rt) => rt,
+        None => return,
+    };
+    let lit = staged_sweep(&rt, false);
+    let dev = staged_sweep(&rt, true);
+    assert_sweeps_identical(&lit, &dev, "literal vs buffer sweep");
+
+    // and both match the pre-existing host full_train_step API verbatim
+    let ops = ModelOps::new(&rt);
+    let (mut client, mut server) = ops.init_models().unwrap();
+    let b = ops.train_batch_size();
+    let ds = synthetic::generate(4 * b, 0x5EED);
+    for batch in ds.batches(b) {
+        ops.full_train_step(&mut client, &mut server, &batch, 0.05)
+            .unwrap();
+    }
+    let host_digest = format!(
+        "{}:{}",
+        hex_digest(&client.digest()),
+        hex_digest(&server.digest())
+    );
+    assert_eq!(lit.digest, host_digest, "staged literal vs raw host API");
+    let ev = ops.evaluate(&client, &server, &ds).unwrap();
+    assert!(ev.loss == lit.eval.0, "host evaluate vs staged eval loss");
+    assert!(ev.accuracy == lit.eval.1, "host evaluate vs staged eval acc");
+}
+
+/// 4 shards x 1 client (8 nodes) — the acceptance topology from
+/// `parallel_equivalence.rs`.
+fn four_shard_cfg(algo: Algo, threads: usize) -> ExpConfig {
+    let mut cfg = ExpConfig::paper_9(algo);
+    cfg.nodes = 8;
+    cfg.shards = 4;
+    cfg.clients_per_shard = 1;
+    cfg.k = 2;
+    cfg.rounds = 2;
+    cfg.samples_per_node = 48;
+    cfg.val_per_node = 24;
+    cfg.test_samples = 96;
+    cfg.threads = threads;
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn ssfl_run(rt: &Runtime, device: bool, threads: usize) -> RunResult {
+    let ops = ModelOps::with_weight_residency(rt, device);
+    let cfg = four_shard_cfg(Algo::Ssfl, threads);
+    let corpus = synthetic::generate(
+        cfg.nodes * (cfg.samples_per_node + cfg.val_per_node + 8),
+        cfg.seed,
+    );
+    let val = synthetic::generate(cfg.test_samples, cfg.seed ^ 1);
+    let test = synthetic::generate(cfg.test_samples, cfg.seed ^ 2);
+    let mut ctx = TrainCtx::with_profile(&cfg, &ops, ComputeProfile::synthetic_default());
+    algos::ssfl::run_with_ctx(&mut ctx, &corpus, &val, &test).unwrap()
+}
+
+fn assert_runs_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{what}: record count");
+    for (x, y) in a.records.iter().zip(b.records.iter()) {
+        assert_eq!(x.round, y.round, "{what}: round index");
+        assert!(x.val_loss == y.val_loss, "{what}: val_loss {} != {}", x.val_loss, y.val_loss);
+        assert!(x.val_acc == y.val_acc, "{what}: val_acc");
+        assert!(x.train_loss == y.train_loss, "{what}: train_loss");
+    }
+    assert!(a.test_loss == b.test_loss, "{what}: test_loss");
+    assert!(a.test_acc == b.test_acc, "{what}: test_acc");
+    assert_eq!(a.model_digest, b.model_digest, "{what}: final model digest");
+    assert!(!a.model_digest.is_empty(), "{what}: digest populated");
+}
+
+/// The acceptance matrix: {literal, buffer} x {threads=1, threads=4}
+/// all produce one identical run — residency and thread count are both
+/// pure perf knobs, independently and combined.
+#[test]
+fn ssfl_residency_bit_identical_at_1_and_4_threads() {
+    let rt = match runtime() {
+        Some(rt) => rt,
+        None => return,
+    };
+    let reference = ssfl_run(&rt, false, 1);
+    for (device, threads, what) in [
+        (true, 1, "buffer t1 vs literal t1"),
+        (false, 4, "literal t4 vs literal t1"),
+        (true, 4, "buffer t4 vs literal t1"),
+    ] {
+        let r = ssfl_run(&rt, device, threads);
+        assert_runs_identical(&reference, &r, what);
+    }
+}
+
+/// `SPLITFED_SERIAL_EXEC=1` (the PJRT-misbehavior escape hatch) must
+/// cover the buffer path too: a serialized runtime still produces the
+/// same bits on both residencies.  Env is set before this test's own
+/// `Runtime::load` — other tests' runtimes at most also serialize,
+/// which never changes numerics.
+#[test]
+fn serial_exec_hatch_covers_buffer_path() {
+    std::env::set_var("SPLITFED_SERIAL_EXEC", "1");
+    let rt = match runtime() {
+        Some(rt) => rt,
+        None => {
+            std::env::remove_var("SPLITFED_SERIAL_EXEC");
+            return;
+        }
+    };
+    let lit = staged_sweep(&rt, false);
+    let dev = staged_sweep(&rt, true);
+    std::env::remove_var("SPLITFED_SERIAL_EXEC");
+    assert_sweeps_identical(&lit, &dev, "serialized literal vs buffer");
+}

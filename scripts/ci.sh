@@ -14,15 +14,22 @@ cd "$(dirname "$0")/.."
 NO_BENCH=0
 [ "${1:-}" = "--no-bench" ] && NO_BENCH=1
 
+echo "==> cargo fmt --check"
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check
+else
+    echo "    rustfmt not installed; skipping format gate"
+fi
+
 echo "==> cargo build --release"
 cargo build --release
 
 echo "==> cargo test -q"
 cargo test -q
 
-echo "==> cargo clippy -- -D warnings"
+echo "==> cargo clippy --all-targets -- -D warnings"
 if cargo clippy --version >/dev/null 2>&1; then
-    cargo clippy -- -D warnings
+    cargo clippy --all-targets -- -D warnings
 else
     echo "    clippy not installed; skipping lint"
 fi
@@ -34,7 +41,15 @@ elif [ ! -f artifacts/manifest.json ]; then
 else
     echo "==> bench smoke (SPLITFED_BENCH_SCALE=smoke runtime_exec)"
     SPLITFED_BENCH_SCALE=smoke cargo bench --bench runtime_exec
-    echo "    perf record: results/bench/runtime_exec/roundtime.json"
+    ROUNDTIME=results/bench/runtime_exec/roundtime.json
+    [ -f "$ROUNDTIME" ] \
+        || { echo "    FAIL: $ROUNDTIME not written"; exit 1; }
+    # the device-residency perf evidence must be present in the record
+    for field in host_transfer_bytes_per_step weight_transfer_bytes_per_step; do
+        grep -q "\"$field\"" "$ROUNDTIME" \
+            || { echo "    FAIL: $ROUNDTIME lacks \"$field\""; exit 1; }
+    done
+    echo "    perf record: $ROUNDTIME"
 
     # Fault-matrix smoke: every algorithm must finish 2 rounds under 20%
     # dropout; the sharded protocols additionally survive a shard-server
