@@ -4,13 +4,15 @@
 //! serial-vs-parallel shard execution phase that tracks the perf
 //! trajectory of wall-clock sharding.
 //!
-//! Reports mean/min/max and host↔device transfer bytes per entry point
-//! over repeated executions, the L3 overhead of a full SSFL round
-//! (everything that is not `execute`), steady-state per-step latency and
-//! transfer bytes on both weight paths (buffer-path weight bytes must be
-//! ~0), and `threads=1` vs `threads=N` round wall time for a 4-shard
-//! SSFL run — written as JSON under `results/bench/runtime_exec/` so
-//! successive PRs can compare.
+//! Reports mean/min/max, host↔device transfer bytes, and fresh device
+//! output allocation per entry point over repeated executions, the L3
+//! overhead of a full SSFL round (everything that is not `execute`),
+//! steady-state per-step latency / transfer / allocation on all three
+//! weight paths — host literals, fresh-output device buffers, and
+//! donated in-place updates (donated weight transfer AND weight
+//! allocation must be ~0) — and `threads=1` vs `threads=N` round wall
+//! time for a 4-shard SSFL run — written as JSON under
+//! `results/bench/runtime_exec/` so successive PRs can compare.
 
 mod bench_common;
 
@@ -51,21 +53,23 @@ fn main() -> anyhow::Result<()> {
     }
     ops.evaluate(&client, &server, &ds)?;
 
+    let per_entry = rt.timing();
     println!("per-entry PJRT latency over {iters} iters (train batch = {}):", ops.train_batch_size());
     println!(
-        "{:<20} {:>8} {:>10} {:>10} {:>10} {:>12} {:>12}",
-        "entry", "calls", "mean_ms", "min_ms", "max_ms", "h2d_bytes", "d2h_bytes"
+        "{:<20} {:>8} {:>10} {:>10} {:>10} {:>12} {:>12} {:>12}",
+        "entry", "calls", "mean_ms", "min_ms", "max_ms", "h2d_bytes", "d2h_bytes", "alloc_bytes"
     );
-    for (name, t) in rt.timing() {
+    for (name, t) in &per_entry {
         println!(
-            "{:<20} {:>8} {:>10.2} {:>10.2} {:>10.2} {:>12} {:>12}",
+            "{:<20} {:>8} {:>10.2} {:>10.2} {:>10.2} {:>12} {:>12} {:>12}",
             name,
             t.calls,
             t.mean_s() * 1e3,
             t.min_s * 1e3,
             t.max_s * 1e3,
             t.h2d_bytes,
-            t.d2h_bytes
+            t.d2h_bytes,
+            t.dev_alloc_bytes
         );
     }
 
@@ -94,16 +98,30 @@ fn main() -> anyhow::Result<()> {
     println!("  L3 overhead     {:>8.2} s ({:.1}%)", wall - inside, 100.0 * (wall - inside) / wall);
     println!("\ntarget (DESIGN.md §Perf): overhead < 10% of wall");
 
-    // ---- device-resident vs host-literal weight path ---------------------
-    // The tentpole measurement: N steady-state train steps with weights
-    // staged once on device vs the literal reference path.  On the
-    // buffer path the per-step host traffic is batch + lr + 3 scalar
-    // stats only; weight traffic (WEIGHT_UPLOAD h2d + WEIGHT_SYNC d2h)
-    // inside the measured loop must be ~0 — weights are uploaded before
-    // and synced after.
+    // ---- literal vs fresh-output vs donated weight path ------------------
+    // The tentpole measurement: N steady-state train steps on the three
+    // paths — host literals (reference), device-resident weights with
+    // fresh output buffers, and device-resident weights *donated* to the
+    // step (in-place update).  On both buffer paths the per-step host
+    // traffic is batch + lr + 3 scalar stats only; weight traffic
+    // (WEIGHT_UPLOAD h2d + WEIGHT_SYNC d2h) inside the measured loop
+    // must be ~0 — weights are uploaded before and synced after.  On
+    // the donated path the per-step device *allocation* for weights must
+    // also be ~0: the updated weights reuse the donated memory, so the
+    // only fresh output bytes per step are the three f32 scalars.
+    struct Steady {
+        step_s: f64,
+        transfer_bytes_step: u64,
+        weight_transfer_bytes_step: u64,
+        /// Fresh device bytes allocated per step for executable outputs.
+        alloc_bytes_step: u64,
+        /// The weight-leaf share of that (total minus the 3 scalars).
+        weight_alloc_bytes_step: u64,
+        digest: String,
+    }
     let steps = 50usize;
-    let steady = |device: bool| -> anyhow::Result<(f64, u64, u64, String)> {
-        let mops = ModelOps::with_weight_residency(&rt, device);
+    let steady = |device: bool, donate: bool| -> anyhow::Result<Steady> {
+        let mops = ModelOps::with_donation(&rt, device, donate);
         let (client, server) = mops.init_models()?;
         let mut cdev = mops.stage_owned(client)?;
         let mut sdev = mops.stage_owned(server)?;
@@ -121,24 +139,62 @@ fn main() -> anyhow::Result<()> {
             .filter_map(|n| timing.get(*n))
             .map(|t| t.h2d_bytes + t.d2h_bytes)
             .sum();
+        let alloc: u64 = timing.values().map(|t| t.dev_alloc_bytes).sum();
+        // weight-leaf allocation = the step entry's output allocation
+        // minus its 3 scalar stats (3 x 4 B per call)
+        let weight_alloc = timing
+            .get("full_train_step")
+            .map(|t| t.dev_alloc_bytes.saturating_sub(t.calls * 12))
+            .unwrap_or(0);
         // sync happens here, OUTSIDE the measured steady-state window —
         // that is the lazy boundary cost, paid once per round
         let cb = cdev.into_bundle(&rt)?;
         let sb = sdev.into_bundle(&rt)?;
         let digest = format!("{}:{}", hex_digest(&cb.digest()), hex_digest(&sb.digest()));
-        Ok((step_s, (h2d + d2h) / steps as u64, weight_bytes / steps as u64, digest))
+        Ok(Steady {
+            step_s,
+            transfer_bytes_step: (h2d + d2h) / steps as u64,
+            weight_transfer_bytes_step: weight_bytes / steps as u64,
+            alloc_bytes_step: alloc / steps as u64,
+            weight_alloc_bytes_step: weight_alloc / steps as u64,
+            digest,
+        })
     };
-    let (lit_step_s, lit_bytes_step, _, lit_digest) = steady(false)?;
-    let (dev_step_s, dev_bytes_step, dev_weight_bytes_step, dev_digest) = steady(true)?;
-    let paths_match = lit_digest == dev_digest;
+    let lit = steady(false, false)?;
+    let fresh = steady(true, false)?;
+    let don = steady(true, true)?;
+    let donating = ops.donates_weights();
+    let paths_match = lit.digest == fresh.digest && fresh.digest == don.digest;
 
-    println!("\ndevice-resident vs host-literal weights ({steps} steady-state steps):");
-    println!("  literal path   {:>8.2} ms/step  {:>10} transfer B/step", lit_step_s * 1e3, lit_bytes_step);
-    println!("  buffer path    {:>8.2} ms/step  {:>10} transfer B/step", dev_step_s * 1e3, dev_bytes_step);
-    println!("  buffer-path weight B/step {dev_weight_bytes_step}  (target ~0)");
-    println!("  step speedup   {:>8.2}x", lit_step_s / dev_step_s.max(1e-9));
+    println!("\nliteral vs fresh-output vs donated weights ({steps} steady-state steps):");
+    println!(
+        "  literal path   {:>8.2} ms/step  {:>10} transfer B/step  {:>10} alloc B/step",
+        lit.step_s * 1e3, lit.transfer_bytes_step, lit.alloc_bytes_step
+    );
+    println!(
+        "  fresh buffers  {:>8.2} ms/step  {:>10} transfer B/step  {:>10} alloc B/step",
+        fresh.step_s * 1e3, fresh.transfer_bytes_step, fresh.alloc_bytes_step
+    );
+    println!(
+        "  donated        {:>8.2} ms/step  {:>10} transfer B/step  {:>10} alloc B/step",
+        don.step_s * 1e3, don.transfer_bytes_step, don.alloc_bytes_step
+    );
+    println!("  donated-path weight transfer B/step {}  (target ~0)", don.weight_transfer_bytes_step);
+    println!(
+        "  donated-path weight alloc B/step    {}  (target ~0{})",
+        don.weight_alloc_bytes_step,
+        if donating { "" } else { "; donation DISABLED — fresh fallback" }
+    );
+    println!("  step speedup (vs literal) {:>8.2}x", lit.step_s / don.step_s.max(1e-9));
     println!("  digests match  {paths_match}");
-    anyhow::ensure!(paths_match, "literal vs buffer path diverged");
+    anyhow::ensure!(paths_match, "literal vs fresh vs donated paths diverged");
+    if donating {
+        anyhow::ensure!(
+            don.weight_alloc_bytes_step == 0,
+            "donated path allocated {} weight B/step (expected 0)",
+            don.weight_alloc_bytes_step
+        );
+    }
 
     // ---- serial vs parallel shard execution ------------------------------
     // 4 shards x 1 client (8 nodes): the smallest topology where the
@@ -194,6 +250,30 @@ fn main() -> anyhow::Result<()> {
 
     let out_dir = Path::new("results/bench/runtime_exec");
     std::fs::create_dir_all(out_dir)?;
+    // Per-entry timing block.  `min_s` is +inf until an entry's first
+    // call lands (EntryTiming::default), and JSON has no inf token — a
+    // zero-call entry used to corrupt the whole document.  Non-finite
+    // values are emitted as null (also enforced inside util::json).
+    let finite = |v: f64| if v.is_finite() { num(v) } else { Json::Null };
+    let entries_doc = Json::Obj(
+        per_entry
+            .iter()
+            .map(|(name, t)| {
+                (
+                    name.clone(),
+                    obj(vec![
+                        ("calls", num(t.calls as f64)),
+                        ("mean_s", finite(t.mean_s())),
+                        ("min_s", finite(t.min_s)),
+                        ("max_s", finite(t.max_s)),
+                        ("h2d_bytes", num(t.h2d_bytes as f64)),
+                        ("d2h_bytes", num(t.d2h_bytes as f64)),
+                        ("dev_alloc_bytes", num(t.dev_alloc_bytes as f64)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
     let doc: Json = obj(vec![
         ("scale", s(&format!("{scale:?}").to_lowercase())),
         ("seed", num(seed as f64)),
@@ -207,12 +287,18 @@ fn main() -> anyhow::Result<()> {
         ("speedup", num(speedup)),
         ("digests_match", Json::Bool(digests_match)),
         ("train_steps", num(steps as f64)),
-        ("literal_step_s", num(lit_step_s)),
-        ("device_step_s", num(dev_step_s)),
-        ("literal_transfer_bytes_per_step", num(lit_bytes_step as f64)),
-        ("host_transfer_bytes_per_step", num(dev_bytes_step as f64)),
-        ("weight_transfer_bytes_per_step", num(dev_weight_bytes_step as f64)),
+        ("literal_step_s", num(lit.step_s)),
+        ("fresh_step_s", num(fresh.step_s)),
+        ("device_step_s", num(don.step_s)),
+        ("literal_transfer_bytes_per_step", num(lit.transfer_bytes_step as f64)),
+        ("host_transfer_bytes_per_step", num(don.transfer_bytes_step as f64)),
+        ("weight_transfer_bytes_per_step", num(don.weight_transfer_bytes_step as f64)),
+        ("fresh_device_alloc_bytes_per_step", num(fresh.alloc_bytes_step as f64)),
+        ("device_alloc_bytes_per_step", num(don.alloc_bytes_step as f64)),
+        ("weight_alloc_bytes_per_step", num(don.weight_alloc_bytes_step as f64)),
+        ("donation_active", Json::Bool(donating)),
         ("device_literal_digests_match", Json::Bool(paths_match)),
+        ("entries", entries_doc),
     ]);
     std::fs::write(out_dir.join("roundtime.json"), doc.to_string())?;
     println!("  wrote {}", out_dir.join("roundtime.json").display());

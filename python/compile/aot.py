@@ -4,9 +4,20 @@ This is the only place Python touches the model after development: it runs
 once (``make artifacts``) and emits, into ``artifacts/``:
 
 * ``<entry>.hlo.txt``   — one HLO-text module per entry point.
+* ``<entry>.donate.hlo.txt`` — for entries that declare ``donate`` slots
+  (weight-in/weight-out steps), the same computation lowered with
+  ``jax.jit(..., donate_argnums=<weight slots>)`` so the module carries
+  an ``input_output_alias`` config: the runtime passes the previous
+  step's weight buffers as donated inputs and XLA writes the updated
+  weights into the same device memory (no fresh allocation per step,
+  and device weight memory is 1x instead of 2x).  Numerics are
+  bit-identical to the plain module — aliasing changes buffer
+  assignment, never the op sequence.
 * ``manifest.json``     — ordered input/output tensor specs per entry
   point, plus model dims and batch sizes; the Rust runtime is driven
-  entirely by this file.
+  entirely by this file.  Donating entries carry a ``donation`` block:
+  the artifact file and the parsed ``{"input": i, "output": o}`` alias
+  pairs (input slot i is consumed; output leaf o reuses its memory).
 * ``init/<name>.bin``   — little-endian f32 initial weights (seeded
   He-normal) for the global client/server models, so every node in every
   algorithm starts from the identical global model, as the paper's
@@ -21,6 +32,7 @@ reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
 import argparse
 import json
 import os
+import re
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +42,11 @@ from jax._src.lib import xla_client as xc
 from . import model
 
 _DTYPES = {"f32": jnp.float32, "s32": jnp.int32}
+
+# `{<output leaf>}: (<param>, {}, may-alias)` pairs from the HloModule
+# header line.  Donation always produces leaf-level aliases (outputs are
+# a flat tuple, params are arrays), so the param index path is `{}`.
+_ALIAS_RE = re.compile(r"\{(\d+)\}:\s*\((\d+),\s*\{\},\s*(?:may|must)-alias\)")
 
 
 def to_hlo_text(lowered) -> str:
@@ -41,14 +58,66 @@ def to_hlo_text(lowered) -> str:
     return comp.as_hlo_text()
 
 
-def lower_entry(name, spec):
-    """Lower one entry point at its manifest shapes; returns HLO text."""
+def lower_entry(name, spec, donate=False):
+    """Lower one entry point at its manifest shapes; returns HLO text.
+
+    With ``donate=True`` the entry's ``donate`` slots are passed to
+    ``jax.jit(donate_argnums=...)``, so the emitted module carries the
+    ``input_output_alias`` config the runtime needs for in-place weight
+    updates.
+    """
     args = [
         jax.ShapeDtypeStruct(tuple(s["shape"]), _DTYPES[s["dtype"]])
         for _, s in spec["inputs"]
     ]
-    lowered = jax.jit(spec["fn"]).lower(*args)
+    donate_argnums = tuple(spec.get("donate", ())) if donate else ()
+    lowered = jax.jit(spec["fn"], donate_argnums=donate_argnums).lower(*args)
     return to_hlo_text(lowered)
+
+
+def parse_aliases(hlo_text):
+    """Extract `(input slot, output leaf)` alias pairs from an HLO module.
+
+    The config lives on the ``HloModule`` header line as
+    ``input_output_alias={ {3}: (0, {}, may-alias), ... }`` — output leaf
+    3 reuses the device memory of parameter 0.  Returns pairs sorted by
+    input slot.
+    """
+    head = hlo_text.splitlines()[0]
+    pairs = [
+        {"input": int(param), "output": int(leaf)}
+        for leaf, param in _ALIAS_RE.findall(head)
+    ]
+    return sorted(pairs, key=lambda p: p["input"])
+
+
+def lower_donated(name, spec):
+    """Lower the donated variant and validate its alias map.
+
+    Every declared ``donate`` slot must have been matched by jax to an
+    output of identical shape and dtype — a silent partial match would
+    leave the runtime donating a buffer XLA still reads, so this is a
+    hard error at artifact-build time.
+    """
+    text = lower_entry(name, spec, donate=True)
+    aliases = parse_aliases(text)
+    declared = sorted(spec["donate"])
+    matched = sorted(p["input"] for p in aliases)
+    if matched != declared:
+        raise SystemExit(
+            f"{name}: donated slots {declared} but lowered aliases cover "
+            f"{matched} — jax could not match every donated input to an "
+            "output (shape/dtype mismatch?)"
+        )
+    for p in aliases:
+        _, ispec = spec["inputs"][p["input"]]
+        _, ospec = spec["outputs"][p["output"]]
+        if ispec != ospec:
+            raise SystemExit(
+                f"{name}: alias input {p['input']} {ispec} != "
+                f"output {p['output']} {ospec}"
+            )
+    return text, aliases
 
 
 def write_init(out_dir: str, seed: int) -> dict:
@@ -104,12 +173,23 @@ def main() -> None:
         fname = f"{name}.hlo.txt"
         with open(os.path.join(args.out, fname), "w") as f:
             f.write(text)
-        manifest["entries"][name] = {
+        entry_doc = {
             "file": fname,
             "inputs": [{"name": n, **s} for n, s in spec["inputs"]],
             "outputs": [{"name": n, **s} for n, s in spec["outputs"]],
         }
         print(f"lowered {name}: {len(text)} chars -> {fname}")
+        if spec.get("donate"):
+            dtext, aliases = lower_donated(name, spec)
+            dfname = f"{name}.donate.hlo.txt"
+            with open(os.path.join(args.out, dfname), "w") as f:
+                f.write(dtext)
+            entry_doc["donation"] = {"file": dfname, "aliases": aliases}
+            print(
+                f"lowered {name} (donated): {len(aliases)} aliased slots "
+                f"-> {dfname}"
+            )
+        manifest["entries"][name] = entry_doc
 
     manifest["init"] = write_init(args.out, args.seed)
 

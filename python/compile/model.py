@@ -250,6 +250,15 @@ def entry_points(train_b=TRAIN_BATCH, eval_b=EVAL_BATCH, eval_b_small=EVAL_BATCH
 
     Input/output specs are ordered; the Rust runtime mirrors this order
     exactly when packing literals.
+
+    Entries whose signature is weight-in/weight-out additionally carry
+    ``donate``: the input slots (always the leading weight parameters)
+    that aot.py lowers a second time with ``jax.jit(...,
+    donate_argnums=donate)``, so the HLO carries ``input_output_alias``
+    and the runtime can update weights in place instead of allocating a
+    fresh output buffer per step.  Every donated slot must alias an
+    output of identical shape/dtype — aot.py refuses to emit a donated
+    artifact otherwise.
     """
     B, EB = train_b, eval_b
     client_shapes = [("cw", _s(3, 3, IN_CH, C1)), ("cb", _s(C1))]
@@ -283,6 +292,7 @@ def entry_points(train_b=TRAIN_BATCH, eval_b=EVAL_BATCH, eval_b_small=EVAL_BATCH
                 ("da", _s(B, IMG // 2, IMG // 2, C1)),
             ]
             + [(n + "_new", s) for n, s in server_shapes],
+            "donate": list(range(len(server_shapes))),
         },
         "client_backward": {
             "fn": client_backward,
@@ -293,6 +303,7 @@ def entry_points(train_b=TRAIN_BATCH, eval_b=EVAL_BATCH, eval_b_small=EVAL_BATCH
                 ("lr", _s()),
             ],
             "outputs": [(n + "_new", s) for n, s in client_shapes],
+            "donate": list(range(len(client_shapes))),
         },
         "evaluate": {
             "fn": evaluate,
@@ -340,5 +351,6 @@ def entry_points(train_b=TRAIN_BATCH, eval_b=EVAL_BATCH, eval_b_small=EVAL_BATCH
                 ("wsum", _s()),
             ]
             + [(n + "_new", s) for n, s in client_shapes + server_shapes],
+            "donate": list(range(len(client_shapes) + len(server_shapes))),
         },
     }

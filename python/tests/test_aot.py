@@ -25,6 +25,32 @@ def test_lower_entry_produces_hlo_text():
     assert "ENTRY" in text
 
 
+def test_donated_lowering_carries_full_alias_map():
+    eps = model.entry_points(train_b=4, eval_b=8)
+    donating = {n: s for n, s in eps.items() if s.get("donate")}
+    assert set(donating) == {
+        "full_train_step",
+        "server_train_step",
+        "client_backward",
+    }
+    for name, spec in donating.items():
+        text, aliases = aot.lower_donated(name, spec)
+        assert "input_output_alias" in text.splitlines()[0], name
+        # every donated slot aliased, ordered by input slot
+        assert [p["input"] for p in aliases] == sorted(spec["donate"]), name
+        # each alias pairs a weight input with its same-shaped output
+        for p in aliases:
+            _, ispec = spec["inputs"][p["input"]]
+            _, ospec = spec["outputs"][p["output"]]
+            assert ispec == ospec, (name, p)
+
+
+def test_plain_lowering_has_no_alias_map():
+    eps = model.entry_points(train_b=4, eval_b=8)
+    text = aot.lower_entry("full_train_step", eps["full_train_step"])
+    assert "input_output_alias" not in text.splitlines()[0]
+
+
 def test_lowered_hlo_parameter_count_matches_manifest():
     eps = model.entry_points(train_b=4, eval_b=8)
     for name, spec in eps.items():
@@ -55,6 +81,15 @@ def test_built_manifest_consistent_with_model():
             {"name": n, **s} for n, s in eps[name]["inputs"]
         ]
         assert entry["inputs"] == want_inputs, name
+        # donating entries ship the donated artifact + its alias map
+        if eps[name].get("donate"):
+            don = entry["donation"]
+            assert os.path.exists(os.path.join(ARTIFACTS, don["file"])), name
+            assert sorted(p["input"] for p in don["aliases"]) == sorted(
+                eps[name]["donate"]
+            ), name
+        else:
+            assert "donation" not in entry, name
     # init weights exist and have the right element counts
     for key, info in man["init"].items():
         path = os.path.join(ARTIFACTS, info["file"])

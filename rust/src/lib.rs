@@ -62,6 +62,12 @@
 //!   the host mirror is synced lazily at aggregation/digest boundaries.
 //!   Residency is numerics-neutral (`rust/tests/buffer_equivalence.rs`);
 //!   `SPLITFED_HOST_LITERALS=1` forces the literal reference path.
+//! * Weight updates are **in place**: train steps donate the current
+//!   weight buffers to an input/output-aliased executable
+//!   (`ExecArg::Donate`), so XLA reuses their device memory for the
+//!   updated weights — no per-step weight allocation, 1x device weight
+//!   memory.  Donation is numerics-neutral too; `SPLITFED_NO_DONATE=1`
+//!   falls back to fresh-output execution.
 
 pub mod aggregation;
 pub mod algos;

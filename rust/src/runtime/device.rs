@@ -19,8 +19,26 @@
 //! validation happens before any state is touched, so a failed call can
 //! never leave a half-old/half-new weight set behind.
 //!
+//! ## Donation (in-place updates)
+//!
+//! On the donation path a train step *consumes* the current weight
+//! buffers: [`take_device`] hands them out by value and marks the
+//! bundle **in flight**, the step donates them to the executable
+//! (`ExecArg::Donate`), and [`adopt`] swaps the aliased output buffers
+//! back in, clearing the flag.  While in flight the bundle refuses
+//! every read ([`sync`], [`bundle`], [`buffers`], [`host_mut`]) — the
+//! old weights no longer exist (XLA reused their memory) and the new
+//! ones haven't landed, so there is nothing consistent to hand out.  A
+//! step that fails between take and adopt leaves the bundle in flight
+//! permanently: unusable, but never half-updated — the same
+//! no-mixed-steps invariant, enforced by refusal instead of rollback.
+//!
 //! [`adopt`]: DeviceBundle::adopt
 //! [`sync`]: DeviceBundle::sync
+//! [`bundle`]: DeviceBundle::bundle
+//! [`buffers`]: DeviceBundle::buffers
+//! [`host_mut`]: DeviceBundle::host_mut
+//! [`take_device`]: DeviceBundle::take_device
 //! [`replace_all`]: super::model
 //!
 //! ## Threading
@@ -47,6 +65,11 @@ pub struct DeviceBundle {
     /// True when the device side has advanced past the mirror (steps
     /// have been adopted since the last sync).  Never true in host mode.
     host_stale: bool,
+    /// True between [`DeviceBundle::take_device`] and the
+    /// [`DeviceBundle::adopt`] that replaces the buffers: the weights
+    /// have been donated to an in-flight step and neither the old nor
+    /// the new set is available.  Never true in host mode.
+    in_flight: bool,
 }
 
 // SAFETY: `xla::PjRtBuffer` holds raw pointers, so Send is not
@@ -75,17 +98,38 @@ impl DeviceBundle {
             host,
             device,
             host_stale: false,
+            in_flight: false,
         })
     }
 
-    /// Weights live on device (buffer path) rather than in the mirror.
+    /// Weights live on device (buffer path) rather than in the mirror —
+    /// true even while the buffers are out on an in-flight donated step
+    /// (residency is a staging mode, not a momentary buffer location).
     pub fn on_device(&self) -> bool {
-        self.device.is_some()
+        self.device.is_some() || self.in_flight
     }
 
-    /// The device buffers, bundle order — `None` in host mode.
+    /// The device buffers, bundle order — `None` in host mode or while
+    /// donated to an in-flight step.
     pub fn buffers(&self) -> Option<&[xla::PjRtBuffer]> {
         self.device.as_deref()
+    }
+
+    /// Take the device buffers out for donation to a train step and
+    /// mark the bundle in flight: until [`adopt`](DeviceBundle::adopt)
+    /// lands the aliased outputs, every read on this bundle is a
+    /// checked error.  Errors (atomically — nothing moves) in host
+    /// mode or when already in flight.
+    pub fn take_device(&mut self) -> Result<Vec<xla::PjRtBuffer>> {
+        if self.in_flight {
+            bail!("take_device: weights already donated to an in-flight step");
+        }
+        let bufs = match self.device.take() {
+            Some(b) => b,
+            None => bail!("take_device on a host-resident bundle"),
+        };
+        self.in_flight = true;
+        Ok(bufs)
     }
 
     /// Number of weight tensors.
@@ -112,16 +156,18 @@ impl DeviceBundle {
     /// Swap freshly-executed output buffers in as the new weights and
     /// mark the mirror stale.  Count is validated before anything moves
     /// (atomic on error); shapes are guaranteed by `execute_buffers`'
-    /// manifest check on the producing entry.
+    /// manifest check on the producing entry.  Also the landing half of
+    /// a donated step: after [`take_device`](DeviceBundle::take_device),
+    /// adopting the aliased output buffers clears the in-flight flag.
     pub fn adopt(&mut self, fresh: Vec<xla::PjRtBuffer>) -> Result<()> {
-        let device = match self.device.as_mut() {
-            Some(d) => d,
-            None => bail!("adopt on a host-resident bundle"),
-        };
-        if fresh.len() != device.len() {
-            bail!("{} fresh buffers for {} weight slots", fresh.len(), device.len());
+        if self.device.is_none() && !self.in_flight {
+            bail!("adopt on a host-resident bundle");
         }
-        *device = fresh;
+        if fresh.len() != self.host.len() {
+            bail!("{} fresh buffers for {} weight slots", fresh.len(), self.host.len());
+        }
+        self.device = Some(fresh);
+        self.in_flight = false;
         self.host_stale = true;
         Ok(())
     }
@@ -131,6 +177,9 @@ impl DeviceBundle {
     /// lazy host sync: train loops adopt freely and only the round
     /// boundaries that need host bytes pay for a transfer.
     pub fn sync(&mut self, rt: &Runtime) -> Result<()> {
+        if self.in_flight {
+            bail!("sync: weights are donated to an in-flight step (step failed mid-donation?)");
+        }
         if !self.host_stale {
             return Ok(());
         }
@@ -168,7 +217,7 @@ impl DeviceBundle {
     /// `ModelOps::train_step`'s dispatch.
     pub(crate) fn host_mut(&mut self) -> &mut Bundle {
         assert!(
-            self.device.is_none(),
+            self.device.is_none() && !self.in_flight,
             "host_mut on a device-resident bundle"
         );
         &mut self.host

@@ -14,20 +14,40 @@
 //!   allocation-per-call, and the numerics baseline the buffer path is
 //!   tested against.
 //! * [`Runtime::execute_buffers`] — the **buffer path**: arguments are
-//!   [`ExecArg`]s, each either a host slice (uploaded for this call) or
-//!   an existing device-resident [`xla::PjRtBuffer`]; results come back
-//!   as one `PjRtBuffer` per output leaf (the binding's `execute_b`
-//!   untuples on device) and are **not** synced to the host.  Callers
-//!   pull only the outputs they need via [`Runtime::read_buffer`] and
+//!   [`ExecArg`]s, each a host slice (uploaded for this call), an
+//!   existing device-resident [`xla::PjRtBuffer`], or an **owned buffer
+//!   donated to the call**; results come back as one `PjRtBuffer` per
+//!   output leaf (the binding's `execute_b` untuples on device) and are
+//!   **not** synced to the host.  Callers pull only the outputs they
+//!   need via [`Runtime::read_buffer`] / [`Runtime::read_output`] and
 //!   keep the rest — typically the updated weights — on device for the
 //!   next step.  This is what lets [`DeviceBundle`] hold a model's
 //!   weights device-resident across every batch of a round, shrinking
 //!   the per-step host transfer to batch data, the learning rate, and a
 //!   few scalar stats.
 //!
-//! Both paths produce **bit-identical** numerics: same executables, same
-//! input bytes, same op order — only the residency of the bytes differs
-//! (`rust/tests/buffer_equivalence.rs` asserts this end to end).
+//! ## Buffer donation (input/output aliasing)
+//!
+//! Entries whose manifest carries a `donation` block have a second
+//! executable compiled from `<entry>.donate.hlo.txt`, whose HLO
+//! `input_output_alias` config maps each weight input slot to its
+//! updated-weight output leaf.  Passing those slots as
+//! [`ExecArg::Donate`] routes the call through the donated executable:
+//! XLA writes the new weights **in place** over the donated device
+//! memory, so the steady-state step allocates no fresh weight buffers
+//! (see [`EntryTiming::dev_alloc_bytes`]) and device weight memory is
+//! 1x instead of 2x.  Donated buffers are *consumed* — `ExecArg::Donate`
+//! takes the buffer by value and `execute_buffers` drops the handle
+//! after the call, so reuse-after-donate is unrepresentable in safe
+//! callers; mixing donated and non-donated weight slots, or donating
+//! when no donated executable exists, is a checked error.
+//! `SPLITFED_NO_DONATE=1` skips compiling the donated variants entirely
+//! (mirroring `SPLITFED_HOST_LITERALS`), which makes every donation
+//! attempt fall back to fresh-output execution upstream.
+//!
+//! All paths produce **bit-identical** numerics: same op order, same
+//! input bytes — residency and aliasing only change where the bytes
+//! live (`rust/tests/buffer_equivalence.rs` asserts this end to end).
 //!
 //! Every execution is timed; [`Runtime::timing`] exposes cumulative
 //! per-entry stats — call counts, mean/min/max latency, and host↔device
@@ -103,13 +123,22 @@ impl ArgValue<'_> {
     }
 }
 
-/// One argument of a buffer-path execution: either a host slice uploaded
-/// for this call, or a buffer already resident on the device (weights,
-/// typically) that crosses no boundary at all.
-#[derive(Clone, Copy, Debug)]
+/// One argument of a buffer-path execution: a host slice uploaded for
+/// this call, a borrowed device-resident buffer that crosses no
+/// boundary at all, or an owned buffer **donated** to the executable —
+/// consumed by the call so its device memory can be reused in place for
+/// the aliased output leaf.
+///
+/// `Donate` owns its buffer (donation invalidates the underlying PJRT
+/// buffer, so a borrow would dangle semantically), which is why this
+/// enum is not `Copy`/`Clone`: moving the argument into
+/// [`Runtime::execute_buffers`] is what makes reuse-after-donate a
+/// compile error rather than a runtime one.
+#[derive(Debug)]
 pub enum ExecArg<'a> {
     Host(ArgValue<'a>),
     Device(&'a xla::PjRtBuffer),
+    Donate(xla::PjRtBuffer),
 }
 
 /// Cumulative wall-clock + host-transfer stats for one entry point.
@@ -127,6 +156,12 @@ pub struct EntryTiming {
     /// Device→host bytes attributed to this entry (literal-path result
     /// tuples + `read_buffer` pulls).
     pub d2h_bytes: u64,
+    /// Device bytes freshly allocated for this entry's *outputs*:
+    /// executable result leaves that are not aliased in place over a
+    /// donated input.  On the donation path a train step's weight
+    /// outputs reuse the donated memory and contribute 0 here — the
+    /// per-step allocator cost the §Perf bench tracks.
+    pub dev_alloc_bytes: u64,
 }
 
 impl Default for EntryTiming {
@@ -138,6 +173,7 @@ impl Default for EntryTiming {
             max_s: 0.0,
             h2d_bytes: 0,
             d2h_bytes: 0,
+            dev_alloc_bytes: 0,
         }
     }
 }
@@ -151,13 +187,17 @@ impl EntryTiming {
         }
     }
 
-    fn record(&mut self, elapsed_s: f64, h2d: usize, d2h: usize) {
+    /// Fold one call into the accumulators.  Public so the invariants
+    /// (`min_s <= mean_s() <= max_s`, monotone totals, additive byte
+    /// counters) can be property-tested (`rust/tests/prop_timing.rs`).
+    pub fn record(&mut self, elapsed_s: f64, h2d: usize, d2h: usize, dev_alloc: usize) {
         self.calls += 1;
         self.total_s += elapsed_s;
         self.min_s = self.min_s.min(elapsed_s);
         self.max_s = self.max_s.max(elapsed_s);
         self.h2d_bytes += h2d as u64;
         self.d2h_bytes += d2h as u64;
+        self.dev_alloc_bytes += dev_alloc as u64;
     }
 }
 
@@ -168,6 +208,10 @@ pub struct Runtime {
     client: xla::PjRtClient,
     manifest: Manifest,
     exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// Donated (input/output-aliased) executable variants, for entries
+    /// whose manifest has a `donation` block.  Empty when
+    /// `SPLITFED_NO_DONATE=1` skipped compiling them.
+    donate_exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
     timing: Mutex<BTreeMap<String, EntryTiming>>,
     /// `Some` when `SPLITFED_SERIAL_EXEC=1`: a client-wide lock taken
     /// around every execution (both paths) — PJRT misbehavior under
@@ -201,9 +245,14 @@ impl Runtime {
             client.platform_name(),
             client.device_count()
         );
-        let mut exes = BTreeMap::new();
-        for (name, entry) in &manifest.entries {
-            let path = dir.join(&entry.file);
+        let no_donate = std::env::var("SPLITFED_NO_DONATE")
+            .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+            .unwrap_or(false);
+        if no_donate {
+            crate::info!("SPLITFED_NO_DONATE set: donated executables disabled (fresh-output path)");
+        }
+        let compile_file = |name: &str, file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(file);
             let t0 = Instant::now();
             let proto = xla::HloModuleProto::from_text_file(
                 path.to_str()
@@ -215,7 +264,18 @@ impl Runtime {
                 .compile(&comp)
                 .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
             crate::debug!("compiled {name} in {:.2?}", t0.elapsed());
-            exes.insert(name.clone(), exe);
+            Ok(exe)
+        };
+        let mut exes = BTreeMap::new();
+        let mut donate_exes = BTreeMap::new();
+        for (name, entry) in &manifest.entries {
+            exes.insert(name.clone(), compile_file(name, &entry.file)?);
+            if let Some(don) = entry.donation.as_ref().filter(|_| !no_donate) {
+                donate_exes.insert(
+                    name.clone(),
+                    compile_file(&format!("{name} (donated)"), &don.file)?,
+                );
+            }
         }
         let serialize_exec = std::env::var("SPLITFED_SERIAL_EXEC")
             .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
@@ -227,9 +287,17 @@ impl Runtime {
             client,
             manifest,
             exes,
+            donate_exes,
             timing: Mutex::new(BTreeMap::new()),
             serial: serialize_exec.then(|| Mutex::new(())),
         })
+    }
+
+    /// Whether `entry` has a donated (in-place weight update) executable
+    /// — false for entries without a manifest `donation` block, for old
+    /// artifact sets, and under `SPLITFED_NO_DONATE=1`.
+    pub fn has_donation(&self, entry: &str) -> bool {
+        self.donate_exes.contains_key(entry)
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -277,7 +345,8 @@ impl Runtime {
                 .map_err(|e| anyhow!("{entry}: to_literal: {e:?}"))?
         };
         let d2h: usize = spec.outputs.iter().map(|o| o.elements() * 4).sum();
-        self.record(entry, t0.elapsed().as_secs_f64(), h2d, d2h);
+        // every output leaf is a fresh device buffer on the literal path
+        self.record(entry, t0.elapsed().as_secs_f64(), h2d, d2h, d2h);
 
         // aot.py lowers with return_tuple=True: always a tuple, even for
         // single outputs.
@@ -299,26 +368,33 @@ impl Runtime {
     }
 
     /// Run `entry` on the buffer path: device args pass straight
-    /// through, host args are uploaded for this call only, and the
-    /// outputs come back as one device buffer per leaf — nothing is
-    /// synced to the host.
+    /// through, host args are uploaded for this call only, donated args
+    /// are **consumed** (their device memory is reused in place for the
+    /// aliased output leaves), and the outputs come back as one device
+    /// buffer per leaf — nothing is synced to the host.
     ///
     /// The binding's `execute_b` runs with untupled results (PJRT
     /// aliases the result tuple's leaves to separate buffers on device),
     /// so unlike the literal path there is no host-side tuple decompose:
     /// output `i` of the returned vec is manifest output `i`.  Callers
-    /// pull scalars/activations with [`Runtime::read_buffer`] and feed
-    /// weight buffers back as `ExecArg::Device` on the next step.
+    /// pull scalars/activations with [`Runtime::read_buffer`] /
+    /// [`Runtime::read_output`] and feed weight buffers back as
+    /// `ExecArg::Device` (borrowed, e.g. for evaluation) or
+    /// `ExecArg::Donate` (consumed, for the next train step).
+    ///
+    /// Donation is all-or-nothing per call: if any arg is `Donate`, the
+    /// entry must have a donated executable and the donated slots must
+    /// be exactly the manifest's alias inputs — a partial donation would
+    /// run an executable whose alias config disagrees with what the
+    /// caller thinks it still owns.  Args are taken by value; the
+    /// donated handles are dropped after execution (PJRT has invalidated
+    /// them), so reuse-after-donate cannot compile.
     pub fn execute_buffers(
         &self,
         entry: &str,
-        args: &[ExecArg<'_>],
+        args: Vec<ExecArg<'_>>,
     ) -> Result<Vec<xla::PjRtBuffer>> {
         let spec = self.manifest.entry(entry)?;
-        let exe = self
-            .exes
-            .get(entry)
-            .ok_or_else(|| anyhow!("no executable for {entry}"))?;
         if args.len() != spec.inputs.len() {
             bail!(
                 "{entry}: {} args for {} inputs",
@@ -326,27 +402,63 @@ impl Runtime {
                 spec.inputs.len()
             );
         }
+        let donating = args.iter().any(|a| matches!(a, ExecArg::Donate(_)));
+        let (exe, donation) = if donating {
+            let exe = self.donate_exes.get(entry).ok_or_else(|| {
+                anyhow!(
+                    "{entry}: donated args but no donated executable \
+                     (SPLITFED_NO_DONATE set, or artifacts lack {entry}.donate.hlo.txt)"
+                )
+            })?;
+            let don = spec
+                .donation
+                .as_ref()
+                .expect("donated executable implies manifest donation block");
+            for (i, arg) in args.iter().enumerate() {
+                let is_donate = matches!(arg, ExecArg::Donate(_));
+                if is_donate != don.donates_input(i) {
+                    bail!(
+                        "{entry}: slot {i} ({}) {} but the donated executable {}",
+                        spec.inputs[i].name,
+                        if is_donate { "is donated" } else { "is not donated" },
+                        if is_donate { "does not alias it" } else { "requires donating it" },
+                    );
+                }
+            }
+            (exe, Some(don))
+        } else {
+            let exe = self
+                .exes
+                .get(entry)
+                .ok_or_else(|| anyhow!("no executable for {entry}"))?;
+            (exe, None)
+        };
 
-        // Upload host-side slots first (owning vec), then assemble the
-        // borrowed arg row — two passes because references into
-        // `uploads` must not alias a vec still being grown.
+        // Upload host-side slots and take ownership of donated buffers
+        // first (owning vec), then assemble the borrowed arg row — two
+        // passes because references into `owned` must not alias a vec
+        // still being grown.
         enum Slot<'a> {
             Dev(&'a xla::PjRtBuffer),
-            Up(usize),
+            Own(usize),
         }
-        let mut uploads: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len());
         let mut slots: Vec<Slot<'_>> = Vec::with_capacity(args.len());
         let mut h2d = 0usize;
-        for (arg, ispec) in args.iter().zip(spec.inputs.iter()) {
+        for (arg, ispec) in args.into_iter().zip(spec.inputs.iter()) {
             match arg {
                 ExecArg::Device(b) => slots.push(Slot::Dev(b)),
+                ExecArg::Donate(b) => {
+                    owned.push(b);
+                    slots.push(Slot::Own(owned.len() - 1));
+                }
                 ExecArg::Host(v) => {
                     let buf = self
-                        .upload(v, ispec)
+                        .upload(&v, ispec)
                         .with_context(|| format!("{entry}:{}", ispec.name))?;
                     h2d += v.byte_len();
-                    uploads.push(buf);
-                    slots.push(Slot::Up(uploads.len() - 1));
+                    owned.push(buf);
+                    slots.push(Slot::Own(owned.len() - 1));
                 }
             }
         }
@@ -354,7 +466,7 @@ impl Runtime {
             .iter()
             .map(|s| match s {
                 Slot::Dev(b) => *b,
-                Slot::Up(i) => &uploads[*i],
+                Slot::Own(i) => &owned[*i],
             })
             .collect();
 
@@ -367,9 +479,22 @@ impl Runtime {
             exe.execute_b(&row)
                 .map_err(|e| anyhow!("{entry}: execute_b failed: {e:?}"))?
         };
+        drop(row);
+        // Donated handles are dead now (PJRT consumed their memory for
+        // the aliased outputs); dropping `owned` releases them and this
+        // call's uploads together.
+        drop(owned);
         // No device→host traffic here: outputs stay resident until a
-        // caller reads them.
-        self.record(entry, t0.elapsed().as_secs_f64(), h2d, 0);
+        // caller reads them.  Fresh device allocation = every output
+        // leaf except the ones written in place over donated inputs.
+        let dev_alloc: usize = spec
+            .outputs
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !donation.map_or(false, |d| d.aliases_output(*i)))
+            .map(|(_, o)| o.elements() * 4)
+            .sum();
+        self.record(entry, t0.elapsed().as_secs_f64(), h2d, 0, dev_alloc);
 
         let bufs = outs
             .into_iter()
@@ -393,7 +518,7 @@ impl Runtime {
             .client
             .buffer_from_host_buffer(t.data(), t.shape(), None)
             .map_err(|e| anyhow!("{label}: upload {:?}: {e:?}", t.shape()))?;
-        self.record(label, t0.elapsed().as_secs_f64(), t.wire_bytes(), 0);
+        self.record(label, t0.elapsed().as_secs_f64(), t.wire_bytes(), 0, 0);
         Ok(buf)
     }
 
@@ -401,6 +526,11 @@ impl Runtime {
     /// tallied (bytes + wall time) under `label` — the entry name for
     /// per-step scalar/activation reads, [`WEIGHT_SYNC`] for lazy bundle
     /// syncs.
+    ///
+    /// The element count pulled from the device is validated against
+    /// `shape` before any state is built; use [`Runtime::read_output`]
+    /// when reading an entry's output leaf so the manifest dtype is
+    /// checked too.
     pub fn read_buffer(
         &self,
         label: &str,
@@ -412,10 +542,47 @@ impl Runtime {
             .to_literal_sync()
             .map_err(|e| anyhow!("{label}: to_literal: {e:?}"))?
             .to_vec::<f32>()
-            .map_err(|e| anyhow!("{label}: to_vec: {e:?}"))?;
+            .map_err(|e| anyhow!("{label}: to_vec as f32: {e:?}"))?;
+        let want: usize = shape.iter().product();
+        if v.len() != want {
+            bail!(
+                "{label}: device buffer holds {} f32 elements, expected {} (shape {:?})",
+                v.len(),
+                want,
+                shape
+            );
+        }
         let t = Tensor::new(shape, v)?;
-        self.record(label, t0.elapsed().as_secs_f64(), 0, t.wire_bytes());
+        self.record(label, t0.elapsed().as_secs_f64(), 0, t.wire_bytes(), 0);
         Ok(t)
+    }
+
+    /// Read output leaf `idx` of `entry` back to the host, validating
+    /// against the manifest [`TensorSpec`] first: a non-f32 output is a
+    /// typed error naming the entry, leaf, and dtype — never a garbled
+    /// reinterpretation of the device bytes.
+    pub fn read_output(
+        &self,
+        entry: &str,
+        idx: usize,
+        buf: &xla::PjRtBuffer,
+    ) -> Result<Tensor> {
+        let spec = self.manifest.entry(entry)?;
+        let ospec = spec
+            .outputs
+            .get(idx)
+            .ok_or_else(|| anyhow!("{entry}: no output leaf {idx} ({} outputs)", spec.outputs.len()))?;
+        if ospec.dtype != Dtype::F32 {
+            bail!(
+                "{entry}:{} (leaf {idx}): output dtype {:?} is not f32 — \
+                 host reads of non-f32 outputs are unsupported",
+                ospec.name,
+                idx,
+                ospec.dtype
+            );
+        }
+        self.read_buffer(entry, buf, ospec.shape.clone())
+            .with_context(|| format!("{entry}:{} (leaf {idx})", ospec.name))
     }
 
     fn upload(&self, arg: &ArgValue<'_>, spec: &TensorSpec) -> Result<xla::PjRtBuffer> {
@@ -427,13 +594,13 @@ impl Runtime {
         .map_err(|e| anyhow!("upload: {e:?}"))
     }
 
-    fn record(&self, entry: &str, elapsed_s: f64, h2d: usize, d2h: usize) {
+    fn record(&self, entry: &str, elapsed_s: f64, h2d: usize, d2h: usize, dev_alloc: usize) {
         self.timing
             .lock()
             .unwrap_or_else(|e| e.into_inner())
             .entry(entry.to_string())
             .or_default()
-            .record(elapsed_s, h2d, d2h);
+            .record(elapsed_s, h2d, d2h, dev_alloc);
     }
 
     /// Cumulative per-entry timing (entry -> stats).  Includes the

@@ -33,12 +33,49 @@ impl TensorSpec {
     }
 }
 
+/// One input-slot -> output-leaf alias of a donated entry variant: the
+/// executable consumes the buffer passed in slot `input` and writes
+/// output leaf `output` into the same device memory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AliasPair {
+    pub input: usize,
+    pub output: usize,
+}
+
+/// The donated (input/output-aliased) variant of an entry point: a
+/// second HLO artifact lowered with `donate_argnums=<weight slots>`,
+/// plus the alias map aot.py parsed out of its module header.  Shapes
+/// and dtypes of every aliased pair are validated at manifest load.
+#[derive(Clone, Debug)]
+pub struct DonationSpec {
+    pub file: String,
+    /// Alias pairs sorted by input slot.
+    pub aliases: Vec<AliasPair>,
+}
+
+impl DonationSpec {
+    /// Whether `slot` is one of the donated input slots.
+    pub fn donates_input(&self, slot: usize) -> bool {
+        self.aliases.iter().any(|a| a.input == slot)
+    }
+
+    /// Whether output leaf `leaf` is written in place over a donated
+    /// input (no fresh device allocation for it).
+    pub fn aliases_output(&self, leaf: usize) -> bool {
+        self.aliases.iter().any(|a| a.output == leaf)
+    }
+}
+
 /// One AOT-lowered entry point.
 #[derive(Clone, Debug)]
 pub struct EntrySpec {
     pub file: String,
     pub inputs: Vec<TensorSpec>,
     pub outputs: Vec<TensorSpec>,
+    /// Present for weight-in/weight-out entries whose donated variant
+    /// was lowered (`<entry>.donate.hlo.txt`); absent in older artifact
+    /// sets, which simply fall back to fresh-output execution.
+    pub donation: Option<DonationSpec>,
 }
 
 /// The whole manifest.
@@ -82,6 +119,69 @@ fn parse_specs(v: &Json) -> Result<Vec<TensorSpec>> {
         .collect()
 }
 
+/// Parse and validate one `donation` block: every alias pair must name
+/// in-range slots whose shape AND dtype match exactly — donating a
+/// buffer into a differently-shaped output would hand XLA aliased
+/// memory of the wrong size, so drift is rejected at load, not at
+/// execute.
+fn parse_donation(
+    v: &Json,
+    inputs: &[TensorSpec],
+    outputs: &[TensorSpec],
+) -> Result<DonationSpec> {
+    let file = v
+        .get("file")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing file"))?
+        .to_string();
+    let mut aliases = Vec::new();
+    for pair in v
+        .get("aliases")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing aliases"))?
+    {
+        let input = pair
+            .get("input")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("alias missing input"))?;
+        let output = pair
+            .get("output")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("alias missing output"))?;
+        let ispec = inputs
+            .get(input)
+            .ok_or_else(|| anyhow!("alias input {input} out of range"))?;
+        let ospec = outputs
+            .get(output)
+            .ok_or_else(|| anyhow!("alias output {output} out of range"))?;
+        if ispec.shape != ospec.shape || ispec.dtype != ospec.dtype {
+            bail!(
+                "alias {input}->{output}: input {} {:?} {:?} != output {} {:?} {:?}",
+                ispec.name,
+                ispec.dtype,
+                ispec.shape,
+                ospec.name,
+                ospec.dtype,
+                ospec.shape
+            );
+        }
+        aliases.push(AliasPair { input, output });
+    }
+    if aliases.is_empty() {
+        bail!("donation block with no aliases");
+    }
+    // reject duplicate slots: one buffer cannot be donated twice, one
+    // output cannot reuse two inputs
+    for (i, a) in aliases.iter().enumerate() {
+        for b in &aliases[i + 1..] {
+            if a.input == b.input || a.output == b.output {
+                bail!("duplicate alias slot ({} or {})", a.input, a.output);
+            }
+        }
+    }
+    Ok(DonationSpec { file, aliases })
+}
+
 impl Manifest {
     /// Load and validate `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
@@ -111,6 +211,19 @@ impl Manifest {
             .and_then(Json::as_obj)
             .ok_or_else(|| anyhow!("missing entries"))?
         {
+            let inputs = parse_specs(
+                e.get("inputs").ok_or_else(|| anyhow!("{name}: inputs"))?,
+            )?;
+            let outputs = parse_specs(
+                e.get("outputs").ok_or_else(|| anyhow!("{name}: outputs"))?,
+            )?;
+            let donation = match e.get("donation") {
+                Some(d) => Some(
+                    parse_donation(d, &inputs, &outputs)
+                        .with_context(|| format!("{name}: donation"))?,
+                ),
+                None => None,
+            };
             entries.insert(
                 name.clone(),
                 EntrySpec {
@@ -119,12 +232,9 @@ impl Manifest {
                         .and_then(Json::as_str)
                         .ok_or_else(|| anyhow!("{name}: missing file"))?
                         .to_string(),
-                    inputs: parse_specs(
-                        e.get("inputs").ok_or_else(|| anyhow!("{name}: inputs"))?,
-                    )?,
-                    outputs: parse_specs(
-                        e.get("outputs").ok_or_else(|| anyhow!("{name}: outputs"))?,
-                    )?,
+                    inputs,
+                    outputs,
+                    donation,
                 },
             );
         }
@@ -243,5 +353,58 @@ mod tests {
     #[test]
     fn missing_manifest_errors() {
         assert!(Manifest::load(Path::new("/nonexistent")).is_err());
+    }
+
+    #[test]
+    fn donation_blocks_parse_and_validate() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let e = m.entry("full_train_step").unwrap();
+        let don = e.donation.as_ref().expect("full_train_step donation");
+        // every weight slot donated, aliased to the matching output leaf
+        assert_eq!(don.aliases.len(), m.client_params.len() + m.server_params.len());
+        for a in &don.aliases {
+            assert_eq!(e.inputs[a.input].shape, e.outputs[a.output].shape);
+            assert_eq!(e.inputs[a.input].dtype, e.outputs[a.output].dtype);
+            assert!(don.donates_input(a.input));
+            assert!(don.aliases_output(a.output));
+        }
+        assert!(!don.donates_input(e.inputs.len() - 1), "lr is not donated");
+        // eval entries have no weight outputs, so no donation variant
+        assert!(m.entry("evaluate").unwrap().donation.is_none());
+        assert!(artifacts_dir().join(&don.file).exists());
+    }
+
+    #[test]
+    fn donation_validation_rejects_drift() {
+        let ins = vec![
+            TensorSpec { name: "w".into(), shape: vec![2, 3], dtype: Dtype::F32 },
+            TensorSpec { name: "x".into(), shape: vec![4], dtype: Dtype::F32 },
+        ];
+        let outs = vec![
+            TensorSpec { name: "loss".into(), shape: vec![], dtype: Dtype::F32 },
+            TensorSpec { name: "w_new".into(), shape: vec![2, 3], dtype: Dtype::F32 },
+        ];
+        let parse = |src: &str| {
+            parse_donation(&Json::parse(src).unwrap(), &ins, &outs)
+        };
+        // valid: input 0 aliases output 1, shapes match
+        let ok = parse(r#"{"file":"f","aliases":[{"input":0,"output":1}]}"#).unwrap();
+        assert_eq!(ok.aliases, vec![AliasPair { input: 0, output: 1 }]);
+        // shape mismatch (input 1 is [4], output 1 is [2,3])
+        assert!(parse(r#"{"file":"f","aliases":[{"input":1,"output":1}]}"#).is_err());
+        // out-of-range slots
+        assert!(parse(r#"{"file":"f","aliases":[{"input":9,"output":1}]}"#).is_err());
+        assert!(parse(r#"{"file":"f","aliases":[{"input":0,"output":9}]}"#).is_err());
+        // duplicate input slot
+        assert!(parse(
+            r#"{"file":"f","aliases":[{"input":0,"output":1},{"input":0,"output":1}]}"#
+        )
+        .is_err());
+        // empty alias list
+        assert!(parse(r#"{"file":"f","aliases":[]}"#).is_err());
     }
 }

@@ -3,9 +3,11 @@
 //! * [`manifest`] — parses `artifacts/manifest.json` (entry points, tensor
 //!   specs, init weights); everything downstream is manifest-driven.
 //! * [`exec`] — the [`Runtime`]: one PJRT CPU client, one compiled
-//!   executable per entry point, two execution paths (host literals and
-//!   device buffers — see the module docs), and per-entry timing stats
-//!   with host↔device transfer byte counters.
+//!   executable per entry point (plus a donated input/output-aliased
+//!   variant for weight-in/weight-out entries), two execution paths
+//!   (host literals and device buffers — see the module docs), and
+//!   per-entry timing stats with host↔device transfer and fresh
+//!   device-allocation byte counters.
 //! * [`device`] — [`DeviceBundle`]: a model half staged on device for
 //!   the duration of a round, host-synced lazily at aggregation/digest
 //!   boundaries.
@@ -24,5 +26,5 @@ pub mod model;
 
 pub use device::DeviceBundle;
 pub use exec::{ArgValue, EntryTiming, ExecArg, Runtime, WEIGHT_SYNC, WEIGHT_UPLOAD};
-pub use manifest::{Dtype, EntrySpec, Manifest, TensorSpec};
+pub use manifest::{AliasPair, DonationSpec, Dtype, EntrySpec, Manifest, TensorSpec};
 pub use model::{EvalResult, ModelOps, StepStats};

@@ -68,12 +68,19 @@ pub struct ModelOps<'a> {
     /// Stage weights as device buffers (buffer path) rather than packing
     /// host literals per step.
     device_weights: bool,
+    /// Donate staged weight buffers to each train step (in-place
+    /// updates).  Only effective when the runtime compiled a donated
+    /// executable for the entry — under `SPLITFED_NO_DONATE=1` (or old
+    /// artifact sets) [`Runtime::has_donation`] is false and steps fall
+    /// back to fresh-output execution.
+    donate_weights: bool,
 }
 
 impl<'a> ModelOps<'a> {
-    /// Default residency: device-resident weights, unless
-    /// `SPLITFED_HOST_LITERALS=1` forces the literal path (escape hatch
-    /// + A/B baseline).
+    /// Default residency: device-resident weights with per-step buffer
+    /// donation, unless `SPLITFED_HOST_LITERALS=1` forces the literal
+    /// path (escape hatch + A/B baseline); `SPLITFED_NO_DONATE=1`
+    /// disables only the donation layer (fresh-output buffer path).
     pub fn new(rt: &'a Runtime) -> ModelOps<'a> {
         let host_literals = std::env::var("SPLITFED_HOST_LITERALS")
             .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
@@ -84,13 +91,36 @@ impl<'a> ModelOps<'a> {
         ModelOps {
             rt,
             device_weights: !host_literals,
+            donate_weights: true,
         }
     }
 
     /// Explicit residency — how the equivalence tests run both paths in
-    /// one process without racing on the environment.
+    /// one process without racing on the environment.  Donation stays on
+    /// (it is a no-op on the literal path and whenever the runtime has
+    /// no donated executable).
     pub fn with_weight_residency(rt: &'a Runtime, device_weights: bool) -> ModelOps<'a> {
-        ModelOps { rt, device_weights }
+        ModelOps {
+            rt,
+            device_weights,
+            donate_weights: true,
+        }
+    }
+
+    /// Explicit residency *and* donation — the in-process A/B knob the
+    /// donate-vs-fresh equivalence tests and the §Perf bench use, so
+    /// both variants run in one process without racing on
+    /// `SPLITFED_NO_DONATE`.
+    pub fn with_donation(
+        rt: &'a Runtime,
+        device_weights: bool,
+        donate_weights: bool,
+    ) -> ModelOps<'a> {
+        ModelOps {
+            rt,
+            device_weights,
+            donate_weights,
+        }
     }
 
     pub fn runtime(&self) -> &Runtime {
@@ -100,6 +130,12 @@ impl<'a> ModelOps<'a> {
     /// Whether [`stage`](ModelOps::stage) puts weights on device.
     pub fn weights_on_device(&self) -> bool {
         self.device_weights
+    }
+
+    /// Whether device train steps will actually donate: this instance's
+    /// knob AND a donated executable compiled for the fused step.
+    pub fn donates_weights(&self) -> bool {
+        self.donate_weights && self.rt.has_donation("full_train_step")
     }
 
     pub fn train_batch_size(&self) -> usize {
@@ -204,34 +240,57 @@ impl<'a> ModelOps<'a> {
     ) -> Result<StepStats> {
         let entry = "full_train_step";
         let lr_arr = [lr];
-        let cbufs = client.buffers().expect("device-resident");
-        let sbufs = server.buffers().expect("device-resident");
-        let mut args: Vec<ExecArg> = Vec::with_capacity(cbufs.len() + sbufs.len() + 4);
-        for b in cbufs {
-            args.push(ExecArg::Device(b));
-        }
-        for b in sbufs {
-            args.push(ExecArg::Device(b));
+        let donate = self.donate_weights && self.rt.has_donation(entry);
+        let n_weights = client.len() + server.len();
+        let mut args: Vec<ExecArg> = Vec::with_capacity(n_weights + 4);
+        if donate {
+            // Donation path: the step consumes the current weight
+            // buffers and writes the updated weights into the same
+            // device memory.  Both bundles are in flight until adopt;
+            // if taking the server's buffers fails, hand the client's
+            // back so a pre-execution error leaves both bundles usable.
+            let cbufs = client.take_device()?;
+            let sbufs = match server.take_device() {
+                Ok(b) => b,
+                Err(e) => {
+                    client.adopt(cbufs)?;
+                    return Err(e);
+                }
+            };
+            args.extend(cbufs.into_iter().map(ExecArg::Donate));
+            args.extend(sbufs.into_iter().map(ExecArg::Donate));
+        } else {
+            let cbufs = client.buffers().expect("device-resident");
+            let sbufs = server.buffers().expect("device-resident");
+            for b in cbufs {
+                args.push(ExecArg::Device(b));
+            }
+            for b in sbufs {
+                args.push(ExecArg::Device(b));
+            }
         }
         args.push(ExecArg::Host(ArgValue::F32(&batch.x)));
         args.push(ExecArg::Host(ArgValue::I32(&batch.y)));
         args.push(ExecArg::Host(ArgValue::F32(&batch.w)));
         args.push(ExecArg::Host(ArgValue::F32(&lr_arr)));
-        let mut out = self.rt.execute_buffers(entry, &args)?;
+        // From here on, a failure on the donation path leaves both
+        // bundles in flight — permanently unusable, never half-updated
+        // (the donated memory is gone; there is no old state to restore).
+        let mut out = self.rt.execute_buffers(entry, args)?;
 
         // Validate the full output split BEFORE adopting anything, so a
         // manifest/bundle drift can never leave one bundle on the new
         // step and the other on the old (the same no-mixed-steps
         // invariant `replace_all` keeps on the literal path).
-        let want = 3 + client.len() + server.len();
+        let want = 3 + n_weights;
         if out.len() != want {
             bail!("{entry}: {} output buffers for {} slots", out.len(), want);
         }
         let mut weights = out.split_off(3);
         let stats = StepStats {
-            loss_sum: self.read_scalar(entry, &out[0])?,
-            correct_sum: self.read_scalar(entry, &out[1])?,
-            wsum: self.read_scalar(entry, &out[2])?,
+            loss_sum: self.read_scalar(entry, 0, &out[0])?,
+            correct_sum: self.read_scalar(entry, 1, &out[1])?,
+            wsum: self.read_scalar(entry, 2, &out[2])?,
         };
         let server_weights = weights.split_off(client.len());
         client.adopt(weights)?;
@@ -261,11 +320,11 @@ impl<'a> ModelOps<'a> {
                 args.push(ExecArg::Host(ArgValue::F32(&batch.x)));
                 args.push(ExecArg::Host(ArgValue::I32(&batch.y)));
                 args.push(ExecArg::Host(ArgValue::F32(&batch.w)));
-                let out = self.rt.execute_buffers(entry, &args)?;
+                let out = self.rt.execute_buffers(entry, args)?;
                 Ok((
-                    self.read_scalar(entry, &out[0])?,
-                    self.read_scalar(entry, &out[1])?,
-                    self.read_scalar(entry, &out[2])?,
+                    self.read_scalar(entry, 0, &out[0])?,
+                    self.read_scalar(entry, 1, &out[1])?,
+                    self.read_scalar(entry, 2, &out[2])?,
                 ))
             }),
             (None, None) => {
@@ -275,8 +334,13 @@ impl<'a> ModelOps<'a> {
         }
     }
 
-    fn read_scalar(&self, entry: &str, buf: &xla::PjRtBuffer) -> Result<f64> {
-        let t = self.rt.read_buffer(entry, buf, vec![])?;
+    /// Read output leaf `idx` of `entry` as an f64 scalar, through the
+    /// dtype-validated [`Runtime::read_output`] path.
+    fn read_scalar(&self, entry: &str, idx: usize, buf: &xla::PjRtBuffer) -> Result<f64> {
+        let t = self.rt.read_output(entry, idx, buf)?;
+        if t.len() != 1 {
+            bail!("{entry}: output {idx} is {:?}, expected a scalar", t.shape());
+        }
         Ok(t.data()[0] as f64)
     }
 

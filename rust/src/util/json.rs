@@ -84,7 +84,14 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if !n.is_finite() {
+                    // JSON has no inf/NaN tokens; emitting Rust's "inf"
+                    // would corrupt the document (bit the roundtime.json
+                    // writer when an entry had zero calls: min_s stays
+                    // at +inf).  Serialize as null, which every reader
+                    // treats as "no value".
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{}", n);
@@ -374,5 +381,16 @@ mod tests {
     fn integers_serialize_without_fraction() {
         assert_eq!(Json::Num(42.0).to_string(), "42");
         assert_eq!(Json::Num(2.5).to_string(), "2.5");
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        // the document stays parseable end to end
+        let doc = obj(vec![("min_s", num(f64::INFINITY)), ("calls", num(0.0))]);
+        let re = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(re.get("min_s").unwrap(), &Json::Null);
     }
 }

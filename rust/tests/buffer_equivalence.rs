@@ -1,16 +1,19 @@
-//! Literal-path vs buffer-path equivalence: running the same training
-//! on host-literal args and on device-resident weight buffers must be
-//! **bit-identical** — per-step stats, evaluation sweeps, round records,
-//! and final model digests, at `threads=1` and `threads=4` alike, with
-//! `SPLITFED_SERIAL_EXEC` still honored.  Same executables, same input
-//! bytes, same op order: weight residency is a pure performance knob,
-//! never a numerics knob (the same contract `parallel_equivalence.rs`
-//! pins for thread count).
+//! Literal-path vs buffer-path vs donated-path equivalence: running the
+//! same training on host-literal args, on device-resident weight
+//! buffers with fresh outputs, and on device-resident weights *donated*
+//! to each step (in-place updates) must be **bit-identical** — per-step
+//! stats, evaluation sweeps, round records, and final model digests, at
+//! `threads=1` and `threads=4` alike, with `SPLITFED_SERIAL_EXEC` still
+//! honored.  Same op order, same input bytes: weight residency and
+//! buffer donation are pure performance knobs, never numerics knobs
+//! (the same contract `parallel_equivalence.rs` pins for thread count).
 //!
 //! Requires `make artifacts`; tests no-op otherwise (CI runs artifacts
-//! first).  Residency is selected per-instance via
-//! `ModelOps::with_weight_residency`, never via the environment, so the
-//! two paths can run in one process without racing.
+//! first; the donation matrix additionally runs this suite under
+//! `SPLITFED_NO_DONATE={0,1}`).  Residency and donation are selected
+//! per-instance via `ModelOps::with_weight_residency` /
+//! `ModelOps::with_donation`, never via the environment, so all paths
+//! can run in one process without racing.
 
 use std::path::PathBuf;
 
@@ -40,9 +43,17 @@ struct SweepOut {
 
 /// A few staged train steps plus a staged evaluation, under the given
 /// residency, on a fixed seed.  The buffer path keeps weights on device
-/// across the whole loop; the literal path is the reference.
+/// across the whole loop (donating each step's weight buffers by
+/// default); the literal path is the reference.
 fn staged_sweep(rt: &Runtime, device: bool) -> SweepOut {
-    let ops = ModelOps::with_weight_residency(rt, device);
+    staged_sweep_donate(rt, device, true)
+}
+
+/// Like [`staged_sweep`] with the donation knob explicit — `donate =
+/// false` forces fresh-output buffer execution even when a donated
+/// executable exists.
+fn staged_sweep_donate(rt: &Runtime, device: bool, donate: bool) -> SweepOut {
+    let ops = ModelOps::with_donation(rt, device, donate);
     let (client, server) = ops.init_models().unwrap();
     let b = ops.train_batch_size();
     let ds = synthetic::generate(4 * b, 0x5EED);
@@ -127,7 +138,11 @@ fn four_shard_cfg(algo: Algo, threads: usize) -> ExpConfig {
 }
 
 fn ssfl_run(rt: &Runtime, device: bool, threads: usize) -> RunResult {
-    let ops = ModelOps::with_weight_residency(rt, device);
+    ssfl_run_donate(rt, device, true, threads)
+}
+
+fn ssfl_run_donate(rt: &Runtime, device: bool, donate: bool, threads: usize) -> RunResult {
+    let ops = ModelOps::with_donation(rt, device, donate);
     let cfg = four_shard_cfg(Algo::Ssfl, threads);
     let corpus = synthetic::generate(
         cfg.nodes * (cfg.samples_per_node + cfg.val_per_node + 8),
@@ -192,4 +207,69 @@ fn serial_exec_hatch_covers_buffer_path() {
     let dev = staged_sweep(&rt, true);
     std::env::remove_var("SPLITFED_SERIAL_EXEC");
     assert_sweeps_identical(&lit, &dev, "serialized literal vs buffer");
+}
+
+/// Donate-vs-fresh stepwise: in-place weight updates produce the same
+/// bits as fresh-output execution (and as the literal reference).  Runs
+/// meaningfully under `SPLITFED_NO_DONATE=1` too — donation silently
+/// degrades to the fresh path, and equality still holds.
+#[test]
+fn donated_path_matches_fresh_path_stepwise() {
+    let rt = match runtime() {
+        Some(rt) => rt,
+        None => return,
+    };
+    if !rt.has_donation("full_train_step") {
+        eprintln!("note: no donated executable (SPLITFED_NO_DONATE or old artifacts) — donate == fresh fallback");
+    }
+    let lit = staged_sweep_donate(&rt, false, false);
+    let fresh = staged_sweep_donate(&rt, true, false);
+    let donated = staged_sweep_donate(&rt, true, true);
+    assert_sweeps_identical(&fresh, &donated, "fresh vs donated sweep");
+    assert_sweeps_identical(&lit, &donated, "literal vs donated sweep");
+}
+
+/// The donation acceptance matrix: {fresh, donated} x {threads=1,
+/// threads=4} all produce one identical SSFL run — donation composes
+/// with shard parallelism without touching numerics.
+#[test]
+fn ssfl_donation_bit_identical_at_1_and_4_threads() {
+    let rt = match runtime() {
+        Some(rt) => rt,
+        None => return,
+    };
+    let reference = ssfl_run_donate(&rt, true, false, 1);
+    for (donate, threads, what) in [
+        (true, 1, "donated t1 vs fresh t1"),
+        (false, 4, "fresh t4 vs fresh t1"),
+        (true, 4, "donated t4 vs fresh t1"),
+    ] {
+        let r = ssfl_run_donate(&rt, true, donate, threads);
+        assert_runs_identical(&reference, &r, what);
+    }
+}
+
+/// Reuse-after-donate is refused at the bundle layer: once a step has
+/// consumed a bundle's buffers, reads error until the aliased outputs
+/// are adopted — and a failed mid-donation step leaves the bundle
+/// unusable rather than half-updated.
+#[test]
+fn in_flight_bundle_refuses_reads() {
+    let rt = match runtime() {
+        Some(rt) => rt,
+        None => return,
+    };
+    let ops = ModelOps::with_donation(&rt, true, true);
+    let (client, _server) = ops.init_models().unwrap();
+    let mut cdev = ops.stage_owned(client).unwrap();
+    let taken = cdev.take_device().unwrap();
+    assert!(cdev.on_device(), "in-flight bundle keeps device residency");
+    assert!(cdev.buffers().is_none(), "no buffers while in flight");
+    assert!(cdev.take_device().is_err(), "double take refused");
+    assert!(cdev.sync(&rt).is_err(), "sync refused while in flight");
+    // adopting buffers back (here: the originals, as a stand-in for the
+    // aliased outputs) restores the bundle
+    cdev.adopt(taken).unwrap();
+    assert!(cdev.buffers().is_some(), "adopt restores the device side");
+    cdev.sync(&rt).unwrap();
 }

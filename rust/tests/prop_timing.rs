@@ -1,0 +1,127 @@
+//! Properties of `EntryTiming::record` — the accumulator every timing
+//! consumer (netsim compute profile, §Perf benches, roundtime.json)
+//! trusts.  No PJRT artifacts needed.
+//!
+//! Invariants, for any call sequence:
+//!
+//! * ordering: `min_s <= mean_s() <= max_s` once at least one call has
+//!   landed, and `min_s <= max_s`.
+//! * monotonicity: `calls`, `total_s`, and every byte counter never
+//!   decrease across `record` calls.
+//! * additivity: byte counters equal the exact sums of what was fed in
+//!   (they are integer-valued u64 adds — no float error).
+//! * bounds: `min_s`/`max_s` are attained by some recorded value.
+//!
+//! Elapsed times are generated as dyadic rationals (`k / 1024`) so sums
+//! are exact in f64 and `total_s` can be compared with equality; the
+//! mean ordering check still allows one ulp of slack from the division.
+
+use splitfed::runtime::EntryTiming;
+use splitfed::util::quickcheck::forall_res;
+
+/// One generated case: a sequence of (elapsed_s, h2d, d2h, dev_alloc).
+fn gen_calls(r: &mut splitfed::util::rng::Rng) -> Vec<(f64, usize, usize, usize)> {
+    let n = 1 + r.below(24);
+    (0..n)
+        .map(|_| {
+            // dyadic elapsed in [0, 1024): exact addition in f64
+            let elapsed = r.below(1 << 20) as f64 / 1024.0;
+            (elapsed, r.below(1 << 20), r.below(1 << 20), r.below(1 << 20))
+        })
+        .collect()
+}
+
+#[test]
+fn record_keeps_ordering_and_additivity() {
+    forall_res(0x71AE_0001, 300, gen_calls, |calls| {
+        let mut t = EntryTiming::default();
+        let (mut h2d, mut d2h, mut alloc, mut total) = (0u64, 0u64, 0u64, 0.0f64);
+        let mut prev_calls = 0u64;
+        for &(e, h, d, a) in calls {
+            t.record(e, h, d, a);
+            h2d += h as u64;
+            d2h += d as u64;
+            alloc += a as u64;
+            total += e;
+            // monotone counters after every single call
+            if t.calls != prev_calls + 1 {
+                return Err(format!("calls jumped {prev_calls} -> {}", t.calls));
+            }
+            prev_calls = t.calls;
+            if t.h2d_bytes != h2d || t.d2h_bytes != d2h || t.dev_alloc_bytes != alloc {
+                return Err(format!(
+                    "byte counters drifted: h2d {}/{h2d} d2h {}/{d2h} alloc {}/{alloc}",
+                    t.h2d_bytes, t.d2h_bytes, t.dev_alloc_bytes
+                ));
+            }
+        }
+        if t.total_s != total {
+            return Err(format!("total_s {} != exact sum {total}", t.total_s));
+        }
+        let lo = calls.iter().map(|c| c.0).fold(f64::INFINITY, f64::min);
+        let hi = calls.iter().map(|c| c.0).fold(0.0f64, f64::max);
+        if t.min_s != lo || t.max_s != hi {
+            return Err(format!(
+                "extrema not attained: min {} vs {lo}, max {} vs {hi}",
+                t.min_s, t.max_s
+            ));
+        }
+        // mean sits between the extrema (one ulp of slack for the divide)
+        let eps = 1e-12 * t.max_s.max(1.0);
+        let mean = t.mean_s();
+        if mean < t.min_s - eps || mean > t.max_s + eps {
+            return Err(format!(
+                "mean {mean} outside [{}, {}]",
+                t.min_s, t.max_s
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fresh_timing_is_the_documented_zero_state() {
+    let t = EntryTiming::default();
+    assert_eq!(t.calls, 0);
+    assert_eq!(t.total_s, 0.0);
+    assert_eq!(t.mean_s(), 0.0, "mean of zero calls is defined as 0");
+    assert!(
+        t.min_s.is_infinite() && t.min_s > 0.0,
+        "min_s starts at +inf — which is why roundtime writers must \
+         guard non-finite fields (util::json serializes them as null)"
+    );
+    assert_eq!(t.max_s, 0.0);
+    assert_eq!(
+        (t.h2d_bytes, t.d2h_bytes, t.dev_alloc_bytes),
+        (0, 0, 0)
+    );
+}
+
+#[test]
+fn merging_two_histories_is_order_independent_on_counters() {
+    // Counters and extrema don't care how calls interleave — the same
+    // multiset of calls in any order lands the same stats.
+    forall_res(0x71AE_0002, 200, gen_calls, |calls| {
+        let mut fwd = EntryTiming::default();
+        for &(e, h, d, a) in calls {
+            fwd.record(e, h, d, a);
+        }
+        let mut rev = EntryTiming::default();
+        for &(e, h, d, a) in calls.iter().rev() {
+            rev.record(e, h, d, a);
+        }
+        // dyadic elapsed values: even total_s is exactly equal
+        let same = fwd.calls == rev.calls
+            && fwd.total_s == rev.total_s
+            && fwd.min_s == rev.min_s
+            && fwd.max_s == rev.max_s
+            && fwd.h2d_bytes == rev.h2d_bytes
+            && fwd.d2h_bytes == rev.d2h_bytes
+            && fwd.dev_alloc_bytes == rev.dev_alloc_bytes;
+        if same {
+            Ok(())
+        } else {
+            Err(format!("order-dependent stats: {fwd:?} vs {rev:?}"))
+        }
+    });
+}

@@ -39,16 +39,33 @@ if [ "$NO_BENCH" = "1" ]; then
 elif [ ! -f artifacts/manifest.json ]; then
     echo "==> bench smoke skipped (artifacts/ not built; run 'make artifacts')"
 else
+    # Donation matrix: the buffer/donation equivalence suite must pass
+    # both with donated executables compiled (NO_DONATE=0) and with the
+    # escape hatch engaged (NO_DONATE=1, fresh-output fallback).
+    echo "==> donation matrix (buffer_equivalence under SPLITFED_NO_DONATE={0,1})"
+    for nd in 0 1; do
+        echo "    SPLITFED_NO_DONATE=$nd"
+        SPLITFED_NO_DONATE=$nd cargo test -q --test buffer_equivalence
+    done
+
     echo "==> bench smoke (SPLITFED_BENCH_SCALE=smoke runtime_exec)"
     SPLITFED_BENCH_SCALE=smoke cargo bench --bench runtime_exec
     ROUNDTIME=results/bench/runtime_exec/roundtime.json
     [ -f "$ROUNDTIME" ] \
         || { echo "    FAIL: $ROUNDTIME not written"; exit 1; }
-    # the device-residency perf evidence must be present in the record
-    for field in host_transfer_bytes_per_step weight_transfer_bytes_per_step; do
+    # the device-residency + donation perf evidence must be present in
+    # the record
+    for field in host_transfer_bytes_per_step weight_transfer_bytes_per_step \
+                 device_alloc_bytes_per_step weight_alloc_bytes_per_step \
+                 fresh_device_alloc_bytes_per_step donation_active; do
         grep -q "\"$field\"" "$ROUNDTIME" \
             || { echo "    FAIL: $ROUNDTIME lacks \"$field\""; exit 1; }
     done
+    # the per-entry dump must be valid JSON even for zero-call entries
+    # (min_s starts at +inf; the writer serializes non-finite as null)
+    if grep -qE ':(-?inf|NaN)' "$ROUNDTIME"; then
+        echo "    FAIL: $ROUNDTIME contains non-finite number tokens"; exit 1
+    fi
     echo "    perf record: $ROUNDTIME"
 
     # Fault-matrix smoke: every algorithm must finish 2 rounds under 20%
