@@ -10,9 +10,12 @@
 //! steady-state per-step latency / transfer / allocation on all three
 //! weight paths — host literals, fresh-output device buffers, and
 //! donated in-place updates (donated weight transfer AND weight
-//! allocation must be ~0) — and `threads=1` vs `threads=N` round wall
-//! time for a 4-shard SSFL run — written as JSON under
-//! `results/bench/runtime_exec/` so successive PRs can compare.
+//! allocation must be ~0) — synchronous vs pipelined batch upload
+//! (steady-state synchronous batch H2D must be ~0 with prefetch on; the
+//! staged bytes + producer upload time report the won-back overlap) —
+//! and `threads=1` vs `threads=N` round wall time for a 4-shard SSFL
+//! run — written as JSON under `results/bench/runtime_exec/` so
+//! successive PRs can compare.
 
 mod bench_common;
 
@@ -24,7 +27,7 @@ use splitfed::config::{Algo, ExpConfig};
 use splitfed::data::synthetic;
 use splitfed::metrics::RunResult;
 use splitfed::netsim::ComputeProfile;
-use splitfed::runtime::{ModelOps, Runtime, WEIGHT_SYNC, WEIGHT_UPLOAD};
+use splitfed::runtime::{ModelOps, Runtime, BATCH_UPLOAD, WEIGHT_SYNC, WEIGHT_UPLOAD};
 use splitfed::util::json::{num, obj, s, Json};
 use splitfed::util::pool;
 
@@ -196,6 +199,79 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // ---- pipelined batch prefetch ----------------------------------------
+    // Synchronous uploads vs the double-buffered pipeline over one epoch
+    // of steady-state steps.  With prefetch on, every step argument is a
+    // device buffer, so the step entry's own synchronous H2D must be ~0;
+    // the batch bytes move under BATCH_UPLOAD on the producer thread
+    // instead, and that upload time is the overlap the pipeline wins
+    // back from the critical path.
+    struct Prefetched {
+        step_s: f64,
+        /// Synchronous per-step batch H2D inside the step entry itself.
+        sync_batch_bytes_step: u64,
+        /// Bytes staged per step by the prefetch producer (off-path).
+        staged_bytes_step: u64,
+        /// Total producer upload time = execution it overlapped.
+        overlap_s: f64,
+        digest: String,
+    }
+    let pf_steps = 50usize;
+    let pds = synthetic::generate(pf_steps * ops.train_batch_size(), 11);
+    let prefetched = |prefetch: bool| -> anyhow::Result<Prefetched> {
+        let mops = ModelOps::with_pipeline(&rt, true, true, prefetch, false);
+        let (client, server) = mops.init_models()?;
+        let mut cdev = mops.stage_owned(client)?;
+        let mut sdev = mops.stage_owned(server)?;
+        mops.train_step(&mut cdev, &mut sdev, &batch, 0.01)?; // warm
+        rt.reset_timing();
+        let t0 = Instant::now();
+        mops.train_epochs_staged(&mut cdev, &mut sdev, &pds, 1, 0.01)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let timing = rt.timing();
+        let step_h2d = timing
+            .get("full_train_step")
+            .map(|t| t.h2d_bytes)
+            .unwrap_or(0);
+        let (staged, overlap) = timing
+            .get(BATCH_UPLOAD)
+            .map(|t| (t.h2d_bytes, t.total_s))
+            .unwrap_or((0, 0.0));
+        let cb = cdev.into_bundle(&rt)?;
+        let sb = sdev.into_bundle(&rt)?;
+        Ok(Prefetched {
+            step_s: wall / pf_steps as f64,
+            sync_batch_bytes_step: step_h2d / pf_steps as u64,
+            staged_bytes_step: staged / pf_steps as u64,
+            overlap_s: overlap,
+            digest: format!("{}:{}", hex_digest(&cb.digest()), hex_digest(&sb.digest())),
+        })
+    };
+    let nopf = prefetched(false)?;
+    let pf = prefetched(true)?;
+    println!("\nsynchronous vs pipelined batch upload ({pf_steps} steady-state steps):");
+    println!(
+        "  synchronous    {:>8.2} ms/step  {:>10} sync batch B/step",
+        nopf.step_s * 1e3,
+        nopf.sync_batch_bytes_step
+    );
+    println!(
+        "  prefetched     {:>8.2} ms/step  {:>10} sync batch B/step (target ~0)",
+        pf.step_s * 1e3,
+        pf.sync_batch_bytes_step
+    );
+    println!(
+        "  staged off-path {:>9} B/step, {:.3} s producer upload overlapped",
+        pf.staged_bytes_step, pf.overlap_s
+    );
+    println!("  digests match  {}", nopf.digest == pf.digest);
+    anyhow::ensure!(nopf.digest == pf.digest, "prefetch on vs off diverged");
+    anyhow::ensure!(
+        pf.sync_batch_bytes_step == 0,
+        "prefetched steps still moved {} synchronous batch B/step (expected 0)",
+        pf.sync_batch_bytes_step
+    );
+
     // ---- serial vs parallel shard execution ------------------------------
     // 4 shards x 1 client (8 nodes): the smallest topology where the
     // paper's shard parallelism can show a >= 2x wall-clock win on a
@@ -231,7 +307,7 @@ fn main() -> anyhow::Result<()> {
     let timed = |threads: usize| -> anyhow::Result<(RunResult, f64)> {
         let mut cfg = pcfg.clone();
         cfg.threads = threads;
-        let mut ctx = TrainCtx::with_profile(&cfg, &ops, ComputeProfile::synthetic_default());
+        let mut ctx = TrainCtx::with_profile(&cfg, &ops, ComputeProfile::synthetic_default())?;
         let t0 = Instant::now();
         let r = splitfed::algos::ssfl::run_with_ctx(&mut ctx, &corpus, &val, &test)?;
         Ok((r, t0.elapsed().as_secs_f64()))
@@ -298,6 +374,16 @@ fn main() -> anyhow::Result<()> {
         ("weight_alloc_bytes_per_step", num(don.weight_alloc_bytes_step as f64)),
         ("donation_active", Json::Bool(donating)),
         ("device_literal_digests_match", Json::Bool(paths_match)),
+        ("prefetch_active", Json::Bool(ops.prefetches_batches())),
+        ("prefetch_step_s", num(pf.step_s)),
+        ("noprefetch_step_s", num(nopf.step_s)),
+        // Steady-state SYNCHRONOUS batch H2D per prefetched step — the
+        // pipeline's whole point is this being 0 (staged bytes move on
+        // the producer thread, reported below as the won-back overlap).
+        ("batch_upload_bytes_per_step", num(pf.sync_batch_bytes_step as f64)),
+        ("batch_staged_bytes_per_step", num(pf.staged_bytes_step as f64)),
+        ("prefetch_overlap_s", finite(pf.overlap_s)),
+        ("prefetch_digests_match", Json::Bool(nopf.digest == pf.digest)),
         ("entries", entries_doc),
     ]);
     std::fs::write(out_dir.join("roundtime.json"), doc.to_string())?;

@@ -24,8 +24,8 @@ fn main() -> anyhow::Result<()> {
     let sim = ShardSim {
         link: LinkModel::lan(),
         prof,
-        act_bytes: ops.act_bytes(),
-        grad_bytes: ops.grad_bytes(),
+        act_bytes: ops.act_bytes()?,
+        grad_bytes: ops.grad_bytes()?,
     };
     let batches = 16; // per client per round
 

@@ -116,24 +116,26 @@ impl<'a> TrainCtx<'a> {
     /// of warm-up steps), derives message sizes from the manifest.
     pub fn new(cfg: &'a ExpConfig, ops: &'a ModelOps<'a>) -> Result<TrainCtx<'a>> {
         let prof = ops.profile_compute(2)?;
-        Ok(Self::with_profile(cfg, ops, prof))
+        Self::with_profile(cfg, ops, prof)
     }
 
     /// Build with an explicit compute profile (tests / what-if sweeps).
+    /// Errors (typed, not a panic) when the artifact set lacks the split
+    /// entry the message sizes derive from.
     pub fn with_profile(
         cfg: &'a ExpConfig,
         ops: &'a ModelOps<'a>,
         prof: ComputeProfile,
-    ) -> TrainCtx<'a> {
+    ) -> Result<TrainCtx<'a>> {
         let lan = LinkModel::lan();
-        TrainCtx {
+        Ok(TrainCtx {
             ops,
             cfg,
             sim: ShardSim {
                 link: lan,
                 prof,
-                act_bytes: ops.act_bytes(),
-                grad_bytes: ops.grad_bytes(),
+                act_bytes: ops.act_bytes()?,
+                grad_bytes: ops.grad_bytes()?,
             },
             lan,
             wan: LinkModel::wan(),
@@ -141,7 +143,7 @@ impl<'a> TrainCtx<'a> {
             rng: Rng::new(cfg.seed ^ 0xA160_0000),
             fault: FaultPlan::generate(&cfg.fault, cfg.seed, cfg.rounds, cfg.nodes),
             t_start: Instant::now(),
-        }
+        })
     }
 
     pub fn wall_s(&self) -> f64 {
@@ -224,21 +226,16 @@ pub fn train_client_on_staged_server(
     server: &mut DeviceBundle,
     node: &Node,
 ) -> Result<StepStats> {
-    let mut stats = StepStats::default();
-    let b = ctx.ops.train_batch_size();
     let mut cdev = ctx
         .ops
         .stage_owned(std::mem::replace(client, Bundle::empty()))?;
-    for _ in 0..ctx.cfg.local_epochs {
-        for batch in node.train.batches(b) {
-            // train_step == client_forward + server_train_step +
-            // client_backward in one PJRT call, on device-resident
-            // weights (bit-identical to the split literal path; proven
-            // in rust/tests/runtime_smoke.rs + buffer_equivalence.rs).
-            let st = ctx.ops.train_step(&mut cdev, server, &batch, ctx.cfg.lr)?;
-            stats.merge(st);
-        }
-    }
+    // The pipelined epoch loop: batch N+1 stages on a producer thread
+    // while step N executes, each step one PJRT call on device-resident
+    // weights — bit-identical to the per-step literal path (proven in
+    // rust/tests/runtime_smoke.rs + buffer_equivalence.rs).
+    let stats = ctx
+        .ops
+        .train_epochs_staged(&mut cdev, server, &node.train, ctx.cfg.local_epochs, ctx.cfg.lr)?;
     *client = cdev.into_bundle(ctx.ops.runtime())?;
     ctx.record_shard_traffic(ctx.batches_per_client(node));
     Ok(stats)

@@ -226,6 +226,26 @@ mod tests {
     }
 
     #[test]
+    fn fill_batch_partial_tail_weights_exclude_padding() {
+        // Regression for the prefetch pipeline's tail handling: after
+        // the scratch held a full batch, refilling it with a padded
+        // tail must zero every padding lane — weights sum to `take`
+        // (so loss/accuracy sums weight by real rows, never by the
+        // padded batch size), labels and pixels cleared, `real` honest.
+        let ds = tiny(10);
+        let mut scratch = Batch::empty();
+        ds.fill_batch(0, 4, 4, &mut scratch); // prime with non-zero rows
+        ds.fill_batch(8, 2, 4, &mut scratch); // padded tail over the same buffers
+        assert_eq!(scratch.real, 2);
+        assert_eq!(scratch.w.len(), 4);
+        assert_eq!(scratch.w.iter().sum::<f32>(), 2.0);
+        assert_eq!(&scratch.w[2..], &[0.0, 0.0]);
+        assert_eq!(&scratch.y[2..], &[0, 0]);
+        assert!(scratch.x[2 * PIXELS..].iter().all(|&v| v == 0.0));
+        assert_eq!(scratch.x.len(), 4 * PIXELS);
+    }
+
+    #[test]
     fn subset_and_counts() {
         let ds = tiny(20);
         let sub = ds.subset(&[0, 10, 5]);

@@ -19,6 +19,12 @@ pub enum SplitFedError {
     /// The failure model left no way to make progress, e.g. every shard
     /// crashed or no live shard was scored (exit code 4).
     Fault(String),
+    /// The PJRT runtime hit an invariant violation mid-step — a missing
+    /// manifest slot, a bundle read while its weights are donated to an
+    /// in-flight step, a staging-ring overwrite (exit code 5).  These
+    /// were panics before PR 9; as typed errors they propagate cleanly
+    /// out of shard worker closures instead of poisoning `parallel_map`.
+    Runtime(String),
 }
 
 impl SplitFedError {
@@ -27,6 +33,7 @@ impl SplitFedError {
             SplitFedError::Config(_) => 2,
             SplitFedError::Contract(_) => 3,
             SplitFedError::Fault(_) => 4,
+            SplitFedError::Runtime(_) => 5,
         }
     }
 }
@@ -37,6 +44,7 @@ impl fmt::Display for SplitFedError {
             SplitFedError::Config(m) => write!(f, "config: {m}"),
             SplitFedError::Contract(m) => write!(f, "contract: {m}"),
             SplitFedError::Fault(m) => write!(f, "fault: {m}"),
+            SplitFedError::Runtime(m) => write!(f, "runtime: {m}"),
         }
     }
 }
@@ -52,6 +60,7 @@ mod tests {
         assert_eq!(SplitFedError::Config("x".into()).exit_code(), 2);
         assert_eq!(SplitFedError::Contract("x".into()).exit_code(), 3);
         assert_eq!(SplitFedError::Fault("x".into()).exit_code(), 4);
+        assert_eq!(SplitFedError::Runtime("x".into()).exit_code(), 5);
     }
 
     #[test]

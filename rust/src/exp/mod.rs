@@ -123,7 +123,7 @@ impl Harness {
         cfg.validate()?;
         let (corpus, val, test) = self.datasets(cfg);
         let ops = self.ops();
-        let mut ctx = algos::common::TrainCtx::with_profile(cfg, &ops, self.profile);
+        let mut ctx = algos::common::TrainCtx::with_profile(cfg, &ops, self.profile)?;
         let result = match cfg.algo {
             Algo::Sl => algos::sl::run_with_ctx(&mut ctx, &corpus, &val, &test)?,
             Algo::Sfl => algos::sfl::run_with_ctx(&mut ctx, &corpus, &val, &test)?,

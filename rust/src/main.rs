@@ -43,7 +43,8 @@ USAGE:
   splitfed profile    [--artifacts DIR]
   splitfed inspect    [--artifacts DIR]
 
-Exit codes: 0 ok, 1 unexpected, 2 config, 3 contract, 4 fault-tolerance.
+Exit codes: 0 ok, 1 unexpected, 2 config, 3 contract, 4 fault-tolerance,
+5 runtime invariant.
 Run `make artifacts` first to build the AOT artifacts.";
 
 fn main() -> ExitCode {
@@ -177,8 +178,8 @@ fn cmd_profile(artifacts: &Path) -> anyhow::Result<()> {
     println!("  server_train_step: {:>8.2} ms", prof.server_step_s * 1e3);
     println!("  evaluate (batch):  {:>8.2} ms", prof.eval_batch_s * 1e3);
     println!("\nmessage sizes (from manifest):");
-    println!("  activation (A+y+w): {:>10} bytes", ops.act_bytes());
-    println!("  gradient (dA):      {:>10} bytes", ops.grad_bytes());
+    println!("  activation (A+y+w): {:>10} bytes", ops.act_bytes()?);
+    println!("  gradient (dA):      {:>10} bytes", ops.grad_bytes()?);
     let (c, s) = ops.init_models()?;
     println!(
         "  client model:       {:>10} bytes ({} params)",

@@ -52,6 +52,7 @@
 use anyhow::{bail, Result};
 
 use super::exec::{Runtime, WEIGHT_SYNC, WEIGHT_UPLOAD};
+use crate::error::SplitFedError;
 use crate::tensor::{Bundle, Tensor};
 
 /// One model half's weights, host-mirrored and (in device mode)
@@ -183,10 +184,11 @@ impl DeviceBundle {
         if !self.host_stale {
             return Ok(());
         }
-        let bufs = self
-            .device
-            .as_ref()
-            .expect("stale implies device-resident");
+        let bufs = self.device.as_ref().ok_or_else(|| {
+            SplitFedError::Runtime(
+                "sync: host mirror marked stale on a bundle with no device buffers".into(),
+            )
+        })?;
         // Pull everything before touching the mirror so a failed read
         // leaves the bundle fully untouched.
         let mut fresh: Vec<Tensor> = Vec::with_capacity(bufs.len());
@@ -212,14 +214,18 @@ impl DeviceBundle {
         Ok(self.host)
     }
 
-    /// Mutable host mirror for the literal-path fallback.  Panics if the
-    /// weights are device-resident — host-mode only, enforced by
-    /// `ModelOps::train_step`'s dispatch.
-    pub(crate) fn host_mut(&mut self) -> &mut Bundle {
-        assert!(
-            self.device.is_none() && !self.in_flight,
-            "host_mut on a device-resident bundle"
-        );
-        &mut self.host
+    /// Mutable host mirror for the literal-path fallback.  A typed error
+    /// if the weights are device-resident — host-mode only, enforced by
+    /// `ModelOps::train_step`'s dispatch (an error here is a dispatch
+    /// bug, surfaced as [`SplitFedError::Runtime`] rather than a panic
+    /// that would poison a shard worker thread).
+    pub(crate) fn host_mut(&mut self) -> Result<&mut Bundle> {
+        if self.device.is_some() || self.in_flight {
+            return Err(SplitFedError::Runtime(
+                "host_mut on a device-resident bundle".into(),
+            )
+            .into());
+        }
+        Ok(&mut self.host)
     }
 }

@@ -54,9 +54,10 @@
 //! transfer bytes (`h2d_bytes`/`d2h_bytes`) — which the netsim compute
 //! profile and the §Perf benchmarks consume.  Weight uploads and lazy
 //! weight syncs done by [`DeviceBundle`] are tallied under the pseudo
-//! entries [`WEIGHT_UPLOAD`] and [`WEIGHT_SYNC`], so `benches/
-//! runtime_exec.rs` can prove that steady-state weight traffic is ~0 on
-//! the buffer path.
+//! entries [`WEIGHT_UPLOAD`] and [`WEIGHT_SYNC`], and pipelined batch
+//! staging under [`BATCH_UPLOAD`], so `benches/runtime_exec.rs` can
+//! prove that steady-state weight traffic is ~0 on the buffer path and
+//! that prefetched steps launch with zero synchronous batch H2D.
 //!
 //! ## Thread safety
 //!
@@ -82,6 +83,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::manifest::{Dtype, Manifest, TensorSpec};
+use crate::error::SplitFedError;
 use crate::tensor::Tensor;
 
 /// Pseudo entry name under which [`DeviceBundle`] weight uploads are
@@ -93,6 +95,12 @@ pub const WEIGHT_UPLOAD: &str = "weight_upload";
 /// Pseudo entry name under which lazy weight syncs (device→host) are
 /// tallied in [`Runtime::timing`].
 pub const WEIGHT_SYNC: &str = "weight_sync";
+
+/// Pseudo entry name under which staged batch uploads (x/y/w + lr on
+/// the prefetch pipeline) are tallied in [`Runtime::timing`].  With
+/// prefetch on, this is host→device time spent **off** the step's
+/// critical path — the bench reports it as `prefetch_overlap_s`.
+pub const BATCH_UPLOAD: &str = "batch_upload";
 
 /// A borrowed argument for one input slot.
 #[derive(Clone, Copy, Debug)]
@@ -410,10 +418,11 @@ impl Runtime {
                      (SPLITFED_NO_DONATE set, or artifacts lack {entry}.donate.hlo.txt)"
                 )
             })?;
-            let don = spec
-                .donation
-                .as_ref()
-                .expect("donated executable implies manifest donation block");
+            let don = spec.donation.as_ref().ok_or_else(|| {
+                SplitFedError::Runtime(format!(
+                    "{entry}: donated executable without a manifest donation block"
+                ))
+            })?;
             for (i, arg) in args.iter().enumerate() {
                 let is_donate = matches!(arg, ExecArg::Donate(_));
                 if is_donate != don.donates_input(i) {
@@ -508,6 +517,24 @@ impl Runtime {
             );
         }
         Ok(bufs)
+    }
+
+    /// Upload one host slice as a device buffer of `spec`'s shape and
+    /// dtype, tallied (bytes + wall time) under `label` —
+    /// [`BATCH_UPLOAD`] for staged-batch prefetch.  The slice is
+    /// validated against the spec before any device work.
+    pub fn upload_arg(
+        &self,
+        label: &str,
+        arg: &ArgValue<'_>,
+        spec: &TensorSpec,
+    ) -> Result<xla::PjRtBuffer> {
+        let t0 = Instant::now();
+        let buf = self
+            .upload(arg, spec)
+            .with_context(|| format!("{label}:{}", spec.name))?;
+        self.record(label, t0.elapsed().as_secs_f64(), arg.byte_len(), 0, 0);
+        Ok(buf)
     }
 
     /// Upload one host tensor to the device, tallied (bytes + wall time)

@@ -11,11 +11,14 @@
 //! * [`device`] — [`DeviceBundle`]: a model half staged on device for
 //!   the duration of a round, host-synced lazily at aggregation/digest
 //!   boundaries.
+//! * [`staging`] — the batch-prefetch parts: the bounded [`Ring`], the
+//!   device-resident [`StagedBatch`], and the [`BatchSpecs`] it uploads
+//!   against.
 //! * [`model`] — [`ModelOps`]: the split-model operations
 //!   (client_forward / server_train_step / client_backward / evaluate /
-//!   full_train_step, plus the staged train_step / evaluate_staged pair)
-//!   with weight bundles in and out, and the compute profiler that feeds
-//!   netsim.
+//!   full_train_step, plus the staged train_step / evaluate_staged /
+//!   train_epochs_staged set) with weight bundles in and out, and the
+//!   compute profiler that feeds netsim.
 //!
 //! [`Tensor`]: crate::tensor::Tensor
 
@@ -23,8 +26,10 @@ pub mod device;
 pub mod exec;
 pub mod manifest;
 pub mod model;
+pub mod staging;
 
 pub use device::DeviceBundle;
-pub use exec::{ArgValue, EntryTiming, ExecArg, Runtime, WEIGHT_SYNC, WEIGHT_UPLOAD};
+pub use exec::{ArgValue, EntryTiming, ExecArg, Runtime, BATCH_UPLOAD, WEIGHT_SYNC, WEIGHT_UPLOAD};
 pub use manifest::{AliasPair, DonationSpec, Dtype, EntrySpec, Manifest, TensorSpec};
 pub use model::{EvalResult, ModelOps, StepStats};
+pub use staging::{BatchSpecs, Ring, StagedBatch, PREFETCH_DEPTH};

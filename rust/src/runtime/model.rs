@@ -21,14 +21,37 @@
 //!   with `SPLITFED_HOST_LITERALS=1` or per-instance with
 //!   [`ModelOps::with_weight_residency`].  `rust/tests/
 //!   buffer_equivalence.rs` proves both paths bit-identical.
+//!
+//! ## Batch prefetch & split stepping
+//!
+//! On the device path, [`ModelOps::train_epochs_staged`] pipelines the
+//! remaining per-step host→device traffic (the batch + lr): a producer
+//! thread stages batch N+1 while step N executes, so steady-state steps
+//! launch with zero synchronous uploads (`SPLITFED_NO_PREFETCH=1`
+//! reverts to synchronous per-step uploads).  `SPLITFED_SPLIT_STEP=1`
+//! swaps the fused step for the paper's three-entry split path
+//! (`client_forward` → `server_train_step` → `client_backward`) with
+//! the activation/gradient staying on device and weights donated per
+//! half.  Every combination is numerics-neutral — same batches, same
+//! order, same bits.
+
+use std::sync::{Condvar, Mutex};
 
 use anyhow::{bail, Result};
 
 use super::device::DeviceBundle;
-use super::exec::{ArgValue, ExecArg, Runtime};
+use super::exec::{ArgValue, ExecArg, Runtime, BATCH_UPLOAD};
+use super::staging::{BatchSpecs, Ring, StagedBatch, PREFETCH_DEPTH};
 use crate::data::{Batch, Dataset};
+use crate::error::SplitFedError;
 use crate::netsim::ComputeProfile;
 use crate::tensor::{Bundle, Tensor};
+
+fn env_flag(name: &str) -> bool {
+    std::env::var(name)
+        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+        .unwrap_or(false)
+}
 
 /// Per-batch training metrics (sums, so they aggregate exactly).
 #[derive(Clone, Copy, Debug, Default)]
@@ -74,37 +97,63 @@ pub struct ModelOps<'a> {
     /// artifact sets) [`Runtime::has_donation`] is false and steps fall
     /// back to fresh-output execution.
     donate_weights: bool,
+    /// Pipeline batch uploads in [`ModelOps::train_epochs_staged`]:
+    /// while step N executes, a producer thread stages step N+1's
+    /// batch as device buffers.  Only effective on the device path;
+    /// `SPLITFED_NO_PREFETCH=1` falls back to synchronous per-step
+    /// uploads (the reference path).
+    prefetch_batches: bool,
+    /// Route device train steps through the split entries
+    /// (`client_forward` → `server_train_step` → `client_backward`,
+    /// activation and gradient staying on device, weights donated per
+    /// half) instead of the fused `full_train_step`.  Off by default —
+    /// the fused step is one PJRT dispatch instead of three — but
+    /// bit-identical, kept as the measured A/B for the paper's
+    /// split-communication accounting (`SPLITFED_SPLIT_STEP=1`).
+    split_step: bool,
 }
 
 impl<'a> ModelOps<'a> {
     /// Default residency: device-resident weights with per-step buffer
-    /// donation, unless `SPLITFED_HOST_LITERALS=1` forces the literal
-    /// path (escape hatch + A/B baseline); `SPLITFED_NO_DONATE=1`
-    /// disables only the donation layer (fresh-output buffer path).
+    /// donation and pipelined batch prefetch, unless
+    /// `SPLITFED_HOST_LITERALS=1` forces the literal path (escape hatch
+    /// + A/B baseline); `SPLITFED_NO_DONATE=1` disables only the
+    /// donation layer (fresh-output buffer path),
+    /// `SPLITFED_NO_PREFETCH=1` only the upload pipeline, and
+    /// `SPLITFED_SPLIT_STEP=1` swaps the fused device step for the
+    /// three-entry split path.
     pub fn new(rt: &'a Runtime) -> ModelOps<'a> {
-        let host_literals = std::env::var("SPLITFED_HOST_LITERALS")
-            .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
-            .unwrap_or(false);
+        let host_literals = env_flag("SPLITFED_HOST_LITERALS");
         if host_literals {
             crate::info!("SPLITFED_HOST_LITERALS set: weight staging disabled (literal path)");
+        }
+        let no_prefetch = env_flag("SPLITFED_NO_PREFETCH");
+        if no_prefetch {
+            crate::info!("SPLITFED_NO_PREFETCH set: batch prefetch disabled (synchronous uploads)");
+        }
+        let split_step = env_flag("SPLITFED_SPLIT_STEP");
+        if split_step {
+            crate::info!("SPLITFED_SPLIT_STEP set: device steps run the split entry path");
         }
         ModelOps {
             rt,
             device_weights: !host_literals,
             donate_weights: true,
+            prefetch_batches: !no_prefetch,
+            split_step,
         }
     }
 
     /// Explicit residency — how the equivalence tests run both paths in
     /// one process without racing on the environment.  Donation stays on
     /// (it is a no-op on the literal path and whenever the runtime has
-    /// no donated executable).
+    /// no donated executable); the prefetch/split knobs keep their env
+    /// defaults so CI's `SPLITFED_NO_PREFETCH={0,1}` matrix exercises
+    /// the whole suite on both pipelines.
     pub fn with_weight_residency(rt: &'a Runtime, device_weights: bool) -> ModelOps<'a> {
-        ModelOps {
-            rt,
-            device_weights,
-            donate_weights: true,
-        }
+        let mut ops = ModelOps::new(rt);
+        ops.device_weights = device_weights;
+        ops
     }
 
     /// Explicit residency *and* donation — the in-process A/B knob the
@@ -116,10 +165,29 @@ impl<'a> ModelOps<'a> {
         device_weights: bool,
         donate_weights: bool,
     ) -> ModelOps<'a> {
+        let mut ops = ModelOps::new(rt);
+        ops.device_weights = device_weights;
+        ops.donate_weights = donate_weights;
+        ops
+    }
+
+    /// Every knob explicit — residency, donation, batch prefetch, and
+    /// fused-vs-split stepping — for equivalence tests and the §Perf
+    /// bench that A/B the pipeline in one process without racing on
+    /// `SPLITFED_NO_PREFETCH` / `SPLITFED_SPLIT_STEP`.
+    pub fn with_pipeline(
+        rt: &'a Runtime,
+        device_weights: bool,
+        donate_weights: bool,
+        prefetch_batches: bool,
+        split_step: bool,
+    ) -> ModelOps<'a> {
         ModelOps {
             rt,
             device_weights,
             donate_weights,
+            prefetch_batches,
+            split_step,
         }
     }
 
@@ -136,6 +204,18 @@ impl<'a> ModelOps<'a> {
     /// knob AND a donated executable compiled for the fused step.
     pub fn donates_weights(&self) -> bool {
         self.donate_weights && self.rt.has_donation("full_train_step")
+    }
+
+    /// Whether [`train_epochs_staged`](ModelOps::train_epochs_staged)
+    /// pipelines batch uploads (device path only).
+    pub fn prefetches_batches(&self) -> bool {
+        self.prefetch_batches && self.device_weights
+    }
+
+    /// Whether train steps run the three-entry split path instead of
+    /// the fused step.
+    pub fn split_steps(&self) -> bool {
+        self.split_step
     }
 
     pub fn train_batch_size(&self) -> usize {
@@ -167,31 +247,32 @@ impl<'a> ModelOps<'a> {
     }
 
     /// Wire size of one activation message (A + labels + weights) —
-    /// what a client uploads per batch.
-    pub fn act_bytes(&self) -> usize {
-        let spec = self
-            .rt
-            .manifest()
-            .entry("server_train_step")
-            .expect("manifest entry");
-        let a = spec.inputs.iter().find(|s| s.name == "a").expect("a input");
+    /// what a client uploads per batch.  A typed error when the
+    /// artifact set lacks the split entry (drift, not a panic).
+    pub fn act_bytes(&self) -> Result<usize> {
+        let spec = self.rt.manifest().entry("server_train_step")?;
+        let a = spec
+            .inputs
+            .iter()
+            .find(|s| s.name == "a")
+            .ok_or_else(|| {
+                SplitFedError::Runtime("server_train_step: no `a` input in manifest".into())
+            })?;
         // A as f32 + labels as i32 + weights as f32
-        a.elements() * 4 + self.train_batch_size() * 8
+        Ok(a.elements() * 4 + self.train_batch_size() * 8)
     }
 
     /// Wire size of one feedback-gradient message (dA).
-    pub fn grad_bytes(&self) -> usize {
-        let spec = self
-            .rt
-            .manifest()
-            .entry("server_train_step")
-            .expect("manifest entry");
+    pub fn grad_bytes(&self) -> Result<usize> {
+        let spec = self.rt.manifest().entry("server_train_step")?;
         let da = spec
             .outputs
             .iter()
             .find(|s| s.name == "da")
-            .expect("da output");
-        da.elements() * 4
+            .ok_or_else(|| {
+                SplitFedError::Runtime("server_train_step: no `da` output in manifest".into())
+            })?;
+        Ok(da.elements() * 4)
     }
 
     // ---- staging (buffer path) ------------------------------------------
@@ -210,11 +291,13 @@ impl<'a> ModelOps<'a> {
         DeviceBundle::from_host(self.rt, host, self.device_weights)
     }
 
-    /// One fused client+server SGD step on staged weights.  On the
-    /// buffer path the only host↔device traffic is the batch, the
-    /// learning rate, and the three scalar stats — the updated weights
-    /// stay on device for the next step.  On the literal path this is
-    /// exactly [`ModelOps::full_train_step`].
+    /// One client+server SGD step on staged weights.  On the buffer
+    /// path the only host↔device traffic is the batch, the learning
+    /// rate, and the three scalar stats — the updated weights stay on
+    /// device for the next step (and under `SPLITFED_SPLIT_STEP=1` the
+    /// activation/gradient do too, between the three split entries).
+    /// On the literal path this is [`ModelOps::full_train_step`] or its
+    /// split-entry equivalent — all bit-identical.
     pub fn train_step(
         &self,
         client: &mut DeviceBundle,
@@ -223,9 +306,28 @@ impl<'a> ModelOps<'a> {
         lr: f32,
     ) -> Result<StepStats> {
         match (client.on_device(), server.on_device()) {
-            (true, true) => self.train_step_device(client, server, batch, lr),
+            (true, true) => {
+                if self.split_step {
+                    // Synchronous staging (the pipelined loop stages on
+                    // the producer thread instead).
+                    let specs = BatchSpecs::resolve(self.rt.manifest())?;
+                    let staged = StagedBatch::upload(self.rt, &specs, batch)?;
+                    let lr_buf = self.upload_lr(&specs, lr)?;
+                    self.train_step_split_staged(client, server, &staged, &lr_buf)
+                } else {
+                    self.train_step_device(client, server, batch, lr)
+                }
+            }
             (false, false) => {
-                self.full_train_step(client.host_mut(), server.host_mut(), batch, lr)
+                if self.split_step {
+                    let a = self.client_forward(client.host_mut()?, batch)?;
+                    let (stats, da) =
+                        self.server_train_step(server.host_mut()?, &a, batch, lr)?;
+                    self.client_backward(client.host_mut()?, batch, &da, lr)?;
+                    Ok(stats)
+                } else {
+                    self.full_train_step(client.host_mut()?, server.host_mut()?, batch, lr)
+                }
             }
             _ => bail!("train_step: bundles staged under different residency modes"),
         }
@@ -260,8 +362,8 @@ impl<'a> ModelOps<'a> {
             args.extend(cbufs.into_iter().map(ExecArg::Donate));
             args.extend(sbufs.into_iter().map(ExecArg::Donate));
         } else {
-            let cbufs = client.buffers().expect("device-resident");
-            let sbufs = server.buffers().expect("device-resident");
+            let cbufs = device_buffers(client, entry)?;
+            let sbufs = device_buffers(server, entry)?;
             for b in cbufs {
                 args.push(ExecArg::Device(b));
             }
@@ -276,13 +378,67 @@ impl<'a> ModelOps<'a> {
         // From here on, a failure on the donation path leaves both
         // bundles in flight — permanently unusable, never half-updated
         // (the donated memory is gone; there is no old state to restore).
-        let mut out = self.rt.execute_buffers(entry, args)?;
+        let out = self.rt.execute_buffers(entry, args)?;
+        self.adopt_fused_outputs(entry, client, server, out)
+    }
 
-        // Validate the full output split BEFORE adopting anything, so a
-        // manifest/bundle drift can never leave one bundle on the new
-        // step and the other on the old (the same no-mixed-steps
-        // invariant `replace_all` keeps on the literal path).
-        let want = 3 + n_weights;
+    /// The fused step on an already-staged batch: every argument is a
+    /// device buffer, so the step itself moves **zero** bytes host→
+    /// device — the steady state the prefetch pipeline buys.
+    fn train_step_fused_staged(
+        &self,
+        client: &mut DeviceBundle,
+        server: &mut DeviceBundle,
+        staged: &StagedBatch,
+        lr_buf: &xla::PjRtBuffer,
+    ) -> Result<StepStats> {
+        let entry = "full_train_step";
+        let donate = self.donate_weights && self.rt.has_donation(entry);
+        let n_weights = client.len() + server.len();
+        let mut args: Vec<ExecArg> = Vec::with_capacity(n_weights + 4);
+        if donate {
+            let cbufs = client.take_device()?;
+            let sbufs = match server.take_device() {
+                Ok(b) => b,
+                Err(e) => {
+                    client.adopt(cbufs)?;
+                    return Err(e);
+                }
+            };
+            args.extend(cbufs.into_iter().map(ExecArg::Donate));
+            args.extend(sbufs.into_iter().map(ExecArg::Donate));
+        } else {
+            let cbufs = device_buffers(client, entry)?;
+            let sbufs = device_buffers(server, entry)?;
+            for b in cbufs {
+                args.push(ExecArg::Device(b));
+            }
+            for b in sbufs {
+                args.push(ExecArg::Device(b));
+            }
+        }
+        args.push(ExecArg::Device(&staged.x));
+        args.push(ExecArg::Device(&staged.y));
+        args.push(ExecArg::Device(&staged.w));
+        args.push(ExecArg::Device(lr_buf));
+        let out = self.rt.execute_buffers(entry, args)?;
+        self.adopt_fused_outputs(entry, client, server, out)
+    }
+
+    /// Split and adopt a fused step's output row: 3 scalar stats, then
+    /// the client weights, then the server weights.  The full split is
+    /// validated BEFORE adopting anything, so a manifest/bundle drift
+    /// can never leave one bundle on the new step and the other on the
+    /// old (the same no-mixed-steps invariant `replace_all` keeps on
+    /// the literal path).
+    fn adopt_fused_outputs(
+        &self,
+        entry: &str,
+        client: &mut DeviceBundle,
+        server: &mut DeviceBundle,
+        mut out: Vec<xla::PjRtBuffer>,
+    ) -> Result<StepStats> {
+        let want = 3 + client.len() + server.len();
         if out.len() != want {
             bail!("{entry}: {} output buffers for {} slots", out.len(), want);
         }
@@ -295,6 +451,293 @@ impl<'a> ModelOps<'a> {
         let server_weights = weights.split_off(client.len());
         client.adopt(weights)?;
         server.adopt(server_weights)?;
+        Ok(stats)
+    }
+
+    /// The split step on an already-staged batch, all three entries on
+    /// device buffers: `client_forward` leaves the activation `a` on
+    /// device, `server_train_step` donates the server weights and
+    /// consumes `a` (returning the gradient `da` as a device buffer),
+    /// and `client_backward` donates the client weights and consumes
+    /// `da` — the paper's SL message path with zero host round-trips
+    /// for activations or gradients, and the staged `x` reused by both
+    /// client entries.
+    fn train_step_split_staged(
+        &self,
+        client: &mut DeviceBundle,
+        server: &mut DeviceBundle,
+        staged: &StagedBatch,
+        lr_buf: &xla::PjRtBuffer,
+    ) -> Result<StepStats> {
+        // 1) client forward — never donated (weights in, activation out)
+        let a = {
+            let entry = "client_forward";
+            let cbufs = device_buffers(client, entry)?;
+            let mut args: Vec<ExecArg> = Vec::with_capacity(cbufs.len() + 1);
+            for b in cbufs {
+                args.push(ExecArg::Device(b));
+            }
+            args.push(ExecArg::Device(&staged.x));
+            let mut out = self.rt.execute_buffers(entry, args)?;
+            if out.len() != 1 {
+                bail!("{entry}: {} output buffers for 1 slot", out.len());
+            }
+            out.pop().ok_or_else(|| {
+                SplitFedError::Runtime("client_forward: empty output row".into())
+            })?
+        };
+
+        // 2) server step — donates server weights; `a` is consumed
+        //    semantically (dropped after this call) even though the
+        //    entry takes it as a plain device arg.
+        let entry = "server_train_step";
+        let donate_s = self.donate_weights && self.rt.has_donation(entry);
+        let ns = server.len();
+        let mut args: Vec<ExecArg> = Vec::with_capacity(ns + 4);
+        if donate_s {
+            args.extend(server.take_device()?.into_iter().map(ExecArg::Donate));
+        } else {
+            for b in device_buffers(server, entry)? {
+                args.push(ExecArg::Device(b));
+            }
+        }
+        args.push(ExecArg::Device(&a));
+        args.push(ExecArg::Device(&staged.y));
+        args.push(ExecArg::Device(&staged.w));
+        args.push(ExecArg::Device(lr_buf));
+        // A failure past this point on a donate path leaves that half
+        // in flight — unusable, never half-updated (see train_step_device).
+        let mut out = self.rt.execute_buffers(entry, args)?;
+        let want = 4 + ns;
+        if out.len() != want {
+            bail!("{entry}: {} output buffers for {} slots", out.len(), want);
+        }
+        let new_server = out.split_off(4);
+        let da = out.pop().ok_or_else(|| {
+            SplitFedError::Runtime("server_train_step: missing dA output".into())
+        })?;
+        let stats = StepStats {
+            loss_sum: self.read_scalar(entry, 0, &out[0])?,
+            correct_sum: self.read_scalar(entry, 1, &out[1])?,
+            wsum: self.read_scalar(entry, 2, &out[2])?,
+        };
+        server.adopt(new_server)?;
+        drop(a); // activation consumed — freed before backprop runs
+
+        // 3) client backward — donates client weights, reuses staged.x
+        let entry = "client_backward";
+        let donate_c = self.donate_weights && self.rt.has_donation(entry);
+        let nc = client.len();
+        let mut args: Vec<ExecArg> = Vec::with_capacity(nc + 3);
+        if donate_c {
+            args.extend(client.take_device()?.into_iter().map(ExecArg::Donate));
+        } else {
+            for b in device_buffers(client, entry)? {
+                args.push(ExecArg::Device(b));
+            }
+        }
+        args.push(ExecArg::Device(&staged.x));
+        args.push(ExecArg::Device(&da));
+        args.push(ExecArg::Device(lr_buf));
+        let out = self.rt.execute_buffers(entry, args)?;
+        if out.len() != nc {
+            bail!("{entry}: {} output buffers for {} slots", out.len(), nc);
+        }
+        client.adopt(out)?;
+        Ok(stats)
+    }
+
+    /// Upload the learning rate once per loop as a device scalar, so
+    /// steady-state prefetched steps move zero synchronous H2D bytes —
+    /// not even the 4-byte lr.
+    fn upload_lr(&self, specs: &BatchSpecs, lr: f32) -> Result<xla::PjRtBuffer> {
+        self.rt.upload_arg(BATCH_UPLOAD, &ArgValue::F32(&[lr]), &specs.lr)
+    }
+
+    /// Dispatch one staged step (fused or split per this instance's
+    /// knob).
+    fn step_staged(
+        &self,
+        client: &mut DeviceBundle,
+        server: &mut DeviceBundle,
+        staged: &StagedBatch,
+        lr_buf: &xla::PjRtBuffer,
+    ) -> Result<StepStats> {
+        if self.split_step {
+            self.train_step_split_staged(client, server, staged, lr_buf)
+        } else {
+            self.train_step_fused_staged(client, server, staged, lr_buf)
+        }
+    }
+
+    /// Train `epochs` passes over `ds` on staged weights — the hot
+    /// client-round loop every algorithm routes through.
+    ///
+    /// On the device path with prefetch on (the default), a producer
+    /// thread stages batch N+1's `x`/`y`/`w` as device buffers while
+    /// step N executes, handing them across through a bounded
+    /// [`Ring`] of depth [`PREFETCH_DEPTH`]; the learning rate is
+    /// uploaded once ahead of the loop, so steady-state steps launch
+    /// with **zero** synchronous host→device copies.  Batch ranges,
+    /// bytes, and step order are identical to the synchronous loop —
+    /// prefetch is numerics-neutral (`rust/tests/buffer_equivalence.rs`
+    /// proves bit-identity, including on padded tail batches).
+    ///
+    /// On the host path, or under `SPLITFED_NO_PREFETCH=1`, this is the
+    /// plain per-step loop over [`ModelOps::train_step`].
+    pub fn train_epochs_staged(
+        &self,
+        client: &mut DeviceBundle,
+        server: &mut DeviceBundle,
+        ds: &Dataset,
+        epochs: usize,
+        lr: f32,
+    ) -> Result<StepStats> {
+        let mut stats = StepStats::default();
+        if ds.is_empty() || epochs == 0 {
+            return Ok(stats);
+        }
+        if !(self.prefetch_batches && client.on_device() && server.on_device()) {
+            let b = self.train_batch_size();
+            for _ in 0..epochs {
+                for batch in ds.batches(b) {
+                    stats.merge(self.train_step(client, server, &batch, lr)?);
+                }
+            }
+            return Ok(stats);
+        }
+        self.train_epochs_pipelined(client, server, ds, epochs, lr)
+    }
+
+    /// The double-buffered upload pipeline behind
+    /// [`ModelOps::train_epochs_staged`].
+    ///
+    /// Shutdown protocol (all transitions under one mutex + condvar):
+    /// the producer sets `producer_done` (with `producer_err` on upload
+    /// failure) when it runs out of batches; the consumer sets `abort`
+    /// on *every* exit — normal, error, or panic (via a drop guard) —
+    /// so the producer can never stay parked on a full ring while
+    /// `thread::scope` waits to join it.  Batches the pipeline never
+    /// ran free their device buffers by plain ownership: the ring and
+    /// any in-flight [`StagedBatch`] drop on the way out.
+    fn train_epochs_pipelined(
+        &self,
+        client: &mut DeviceBundle,
+        server: &mut DeviceBundle,
+        ds: &Dataset,
+        epochs: usize,
+        lr: f32,
+    ) -> Result<StepStats> {
+        let b = self.train_batch_size();
+        let specs = BatchSpecs::resolve(self.rt.manifest())?;
+        let lr_buf = self.upload_lr(&specs, lr)?;
+
+        struct PipeState {
+            ring: Ring<StagedBatch>,
+            producer_done: bool,
+            producer_err: Option<anyhow::Error>,
+            abort: bool,
+        }
+        fn lock(st: &Mutex<PipeState>) -> std::sync::MutexGuard<'_, PipeState> {
+            st.lock().unwrap_or_else(|e| e.into_inner())
+        }
+        struct AbortGuard<'g> {
+            state: &'g Mutex<PipeState>,
+            cv: &'g Condvar,
+        }
+        impl Drop for AbortGuard<'_> {
+            fn drop(&mut self) {
+                let mut st = lock(self.state);
+                st.abort = true;
+                self.cv.notify_all();
+            }
+        }
+
+        let state = Mutex::new(PipeState {
+            ring: Ring::new(PREFETCH_DEPTH),
+            producer_done: false,
+            producer_err: None,
+            abort: false,
+        });
+        let cv = Condvar::new();
+
+        let mut stats = StepStats::default();
+        std::thread::scope(|scope| -> Result<()> {
+            scope.spawn(|| {
+                let produce = || -> Result<()> {
+                    let mut scratch = Batch::empty();
+                    for _ in 0..epochs {
+                        let mut pos = 0usize;
+                        while pos < ds.len() {
+                            let take = (ds.len() - pos).min(b);
+                            // One contiguous range per batch, advancing
+                            // by `take` — byte-identical to the
+                            // `Dataset::batches` iterator, and a padded
+                            // tail is staged exactly once.
+                            ds.fill_batch(pos, take, b, &mut scratch);
+                            // The overlap: this upload runs while the
+                            // training thread executes earlier steps.
+                            let staged = StagedBatch::upload(self.rt, &specs, &scratch)?;
+                            let mut st = lock(&state);
+                            while st.ring.is_full() && !st.abort {
+                                st = cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                            }
+                            if st.abort {
+                                // Consumer bailed; `staged` (and the
+                                // queued ring slots) free on drop.
+                                return Ok(());
+                            }
+                            if st.ring.push(staged).is_err() {
+                                return Err(SplitFedError::Runtime(
+                                    "prefetch ring refused a push after reporting space".into(),
+                                )
+                                .into());
+                            }
+                            cv.notify_all();
+                            drop(st);
+                            pos += take;
+                        }
+                    }
+                    Ok(())
+                };
+                let result = produce();
+                let mut st = lock(&state);
+                st.producer_done = true;
+                if let Err(e) = result {
+                    st.producer_err = Some(e);
+                }
+                cv.notify_all();
+            });
+
+            let _guard = AbortGuard {
+                state: &state,
+                cv: &cv,
+            };
+            loop {
+                let staged = {
+                    let mut st = lock(&state);
+                    loop {
+                        if let Some(sb) = st.ring.pop() {
+                            cv.notify_all(); // a slot freed: wake the producer
+                            break Some(sb);
+                        }
+                        if st.producer_done {
+                            break None;
+                        }
+                        st = cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                    }
+                };
+                let Some(staged) = staged else { break };
+                stats.merge(self.step_staged(client, server, &staged, &lr_buf)?);
+                // `staged` drops here: a consumed batch's buffers are
+                // freed and can never be handed out again.
+            }
+            let mut st = lock(&state);
+            if let Some(e) = st.producer_err.take() {
+                return Err(e);
+            }
+            Ok(())
+        })?;
         Ok(stats)
     }
 
@@ -512,7 +955,9 @@ impl<'a> ModelOps<'a> {
         let (mut client, mut server) = self.init_models()?;
         let b = self.train_batch_size();
         let ds = crate::data::synthetic::generate(b.max(self.eval_batch_size()), 0xBEEF);
-        let batch = ds.batches(b).next().expect("one batch");
+        let batch = ds.batches(b).next().ok_or_else(|| {
+            SplitFedError::Runtime("profile_compute: synthetic dataset produced no batch".into())
+        })?;
 
         self.rt.reset_timing();
         for _ in 0..iters.max(1) {
@@ -555,6 +1000,20 @@ impl<'a> ModelOps<'a> {
         }
         Ok(prof)
     }
+}
+
+/// Borrow a staged bundle's device buffers for a fresh-output step — a
+/// typed [`SplitFedError::Runtime`] (never a panic on a shard worker
+/// thread) when the weights aren't readable: host-resident, or donated
+/// to an in-flight step that failed before adopting.
+fn device_buffers<'b>(bundle: &'b DeviceBundle, entry: &str) -> Result<&'b [xla::PjRtBuffer]> {
+    bundle.buffers().ok_or_else(|| {
+        SplitFedError::Runtime(format!(
+            "{entry}: weights are not readable on device \
+             (host-resident or donated to an in-flight step)"
+        ))
+        .into()
+    })
 }
 
 /// Append one bundle's tensors as borrowed args (callers pre-size the
@@ -600,7 +1059,17 @@ fn replace_all(bundles: &mut [&mut Bundle], new: Vec<Tensor>) -> Result<()> {
     let mut it = new.into_iter();
     for b in bundles.iter_mut() {
         for old in b.tensors_mut() {
-            *old = it.next().expect("validated length");
+            match it.next() {
+                Some(t) => *old = t,
+                // Unreachable — the length was validated above — but a
+                // typed refusal beats poisoning a shard worker thread.
+                None => {
+                    return Err(SplitFedError::Runtime(
+                        "replace_all: validated length underflowed".into(),
+                    )
+                    .into())
+                }
+            }
         }
     }
     Ok(())

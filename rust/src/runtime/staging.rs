@@ -1,0 +1,205 @@
+//! Staged-batch prefetch: the double-buffered upload pipeline's parts.
+//!
+//! The per-step host→device traffic left after PR 7/8 is the batch
+//! itself (`x`/`y`/`w`) plus the learning rate.  The prefetch pipeline
+//! (`ModelOps::train_epochs_staged`) moves those uploads off the step's
+//! critical path: a producer thread fills a scratch [`Batch`] from the
+//! dataset, uploads it as device buffers (a [`StagedBatch`]), and hands
+//! it to the training thread through a small bounded [`Ring`] — while
+//! step N executes, step N+1's batch is already crossing the boundary.
+//!
+//! The pieces here are deliberately dumb and separately testable:
+//!
+//! * [`Ring`] — a fixed-capacity FIFO that **refuses** to overwrite: a
+//!   full ring hands the pushed item back instead of dropping or
+//!   clobbering an in-flight slot, and popping *moves* the item out so
+//!   a consumed batch can never be handed out twice.  Property-tested
+//!   in `rust/tests/prop_ring.rs` (slot never overwritten, popped item
+//!   never reused, no leak on early drop).
+//! * [`BatchSpecs`] — the manifest [`TensorSpec`]s for `x`/`y`/`wts`/
+//!   `lr`, resolved once per loop instead of per step.  The split
+//!   entries (`client_forward`/`server_train_step`/`client_backward`)
+//!   share these shapes with `full_train_step` by construction, so one
+//!   staged batch serves the fused and split step paths alike.
+//! * [`StagedBatch`] — one batch's device buffers plus its real-row
+//!   count.  Dropping it frees the device memory, whether the step
+//!   consumed it or errored first — cleanup is ownership, not protocol.
+//!
+//! `SPLITFED_NO_PREFETCH=1` disables the pipeline (synchronous per-step
+//! uploads, the reference path); prefetch is numerics-neutral — same
+//! batches, same bytes, same order — proven bit-identical in
+//! `rust/tests/buffer_equivalence.rs`.
+
+use anyhow::Result;
+
+use super::exec::{ArgValue, Runtime, BATCH_UPLOAD};
+use super::manifest::{Manifest, TensorSpec};
+use crate::data::Batch;
+use crate::error::SplitFedError;
+
+/// How many staged batches the prefetch pipeline keeps in flight: one
+/// executing + one staging (double buffering).  More depth buys nothing
+/// — the producer can only ever be one upload ahead of a step that is
+/// itself longer than an upload — and would just hold device memory.
+pub const PREFETCH_DEPTH: usize = 2;
+
+/// Fixed-capacity FIFO ring for staged batches.
+///
+/// Two refusal guarantees back the pipeline's safety argument:
+/// [`push`](Ring::push) on a full ring returns the item to the caller
+/// (an in-flight slot is never overwritten, so a device buffer the
+/// training thread may be about to take can never be dropped under it),
+/// and [`pop`](Ring::pop) moves the item out by value (a batch handed
+/// to a step cannot be observed again through the ring).  Dropping the
+/// ring drops whatever is still queued — on an error exit the un-run
+/// batches free their device buffers through plain ownership.
+#[derive(Debug)]
+pub struct Ring<T> {
+    slots: std::collections::VecDeque<T>,
+    capacity: usize,
+}
+
+impl<T> Ring<T> {
+    /// A ring holding at most `capacity` items (minimum 1).
+    pub fn new(capacity: usize) -> Ring<T> {
+        let capacity = capacity.max(1);
+        Ring {
+            slots: std::collections::VecDeque::with_capacity(capacity),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.slots.len() >= self.capacity
+    }
+
+    /// Queue `item`, oldest-first order preserved.  A full ring refuses
+    /// and hands the item back — never overwrites a queued slot.
+    pub fn push(&mut self, item: T) -> std::result::Result<(), T> {
+        if self.is_full() {
+            return Err(item);
+        }
+        self.slots.push_back(item);
+        Ok(())
+    }
+
+    /// Take the oldest queued item out, or `None` when empty.
+    pub fn pop(&mut self) -> Option<T> {
+        self.slots.pop_front()
+    }
+}
+
+/// The manifest tensor specs a staged batch uploads against, resolved
+/// once per training loop from the fused entry (`full_train_step`) —
+/// whose `x`/`y`/`wts`/`lr` slots are shape-identical to the split
+/// entries' by construction (aot.py lowers both from the same jax fns).
+#[derive(Clone, Debug)]
+pub struct BatchSpecs {
+    pub x: TensorSpec,
+    pub y: TensorSpec,
+    pub w: TensorSpec,
+    pub lr: TensorSpec,
+}
+
+impl BatchSpecs {
+    /// Resolve the batch slots from the manifest, a typed error when an
+    /// expected input is missing (artifact drift).
+    pub fn resolve(manifest: &Manifest) -> Result<BatchSpecs> {
+        let entry = "full_train_step";
+        let spec = manifest.entry(entry)?;
+        let find = |name: &str| -> Result<TensorSpec> {
+            spec.inputs
+                .iter()
+                .find(|s| s.name == name)
+                .cloned()
+                .ok_or_else(|| {
+                    SplitFedError::Runtime(format!("{entry}: no `{name}` input in manifest")).into()
+                })
+        };
+        Ok(BatchSpecs {
+            x: find("x")?,
+            y: find("y")?,
+            w: find("wts")?,
+            lr: find("lr")?,
+        })
+    }
+}
+
+/// One batch resident on device: `x`/`y`/`w` buffers plus the real
+/// (non-padding) row count.  Produced by [`StagedBatch::upload`] on the
+/// prefetch producer thread, consumed (borrowed as `ExecArg::Device`
+/// args, then dropped) by the training thread; the buffers free with
+/// the value on every exit path.
+pub struct StagedBatch {
+    pub x: xla::PjRtBuffer,
+    pub y: xla::PjRtBuffer,
+    pub w: xla::PjRtBuffer,
+    /// Real rows in this batch (`Batch::real`); padding rows carry zero
+    /// weight, so stats sums are take-weighted automatically.
+    pub real: usize,
+}
+
+// SAFETY: `xla::PjRtBuffer` holds raw pointers, so Send is not
+// auto-derived.  A StagedBatch crosses threads exactly once — producer
+// to training thread through the Mutex-guarded ring — and is only ever
+// used by one thread at a time; buffer creation and execution are
+// thread-compatible client operations under the same PJRT contract
+// that backs `unsafe impl Send for DeviceBundle`.
+unsafe impl Send for StagedBatch {}
+
+impl StagedBatch {
+    /// Upload one host batch as device buffers, tallied under
+    /// [`BATCH_UPLOAD`].  On the pipeline this runs on the producer
+    /// thread, overlapping the previous step's execution.
+    pub fn upload(rt: &Runtime, specs: &BatchSpecs, batch: &Batch) -> Result<StagedBatch> {
+        Ok(StagedBatch {
+            x: rt.upload_arg(BATCH_UPLOAD, &ArgValue::F32(&batch.x), &specs.x)?,
+            y: rt.upload_arg(BATCH_UPLOAD, &ArgValue::I32(&batch.y), &specs.y)?,
+            w: rt.upload_arg(BATCH_UPLOAD, &ArgValue::F32(&batch.w), &specs.w)?,
+            real: batch.real,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_fifo_and_refuses_overwrite() {
+        let mut r: Ring<u32> = Ring::new(2);
+        assert_eq!(r.capacity(), 2);
+        assert!(r.is_empty());
+        assert!(r.push(1).is_ok());
+        assert!(r.push(2).is_ok());
+        assert!(r.is_full());
+        // full: the item comes back, the queued slots are untouched
+        assert_eq!(r.push(3), Err(3));
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.pop(), Some(1));
+        assert!(r.push(3).is_ok());
+        assert_eq!(r.pop(), Some(2));
+        assert_eq!(r.pop(), Some(3));
+        assert_eq!(r.pop(), None);
+    }
+
+    #[test]
+    fn ring_capacity_floor_is_one() {
+        let mut r: Ring<u8> = Ring::new(0);
+        assert_eq!(r.capacity(), 1);
+        assert!(r.push(7).is_ok());
+        assert_eq!(r.push(8), Err(8));
+    }
+}

@@ -8,12 +8,17 @@
 //! buffer donation are pure performance knobs, never numerics knobs
 //! (the same contract `parallel_equivalence.rs` pins for thread count).
 //!
+//! The same contract covers the batch-prefetch pipeline and the split
+//! three-entry step: `train_epochs_staged` with prefetch on/off, fused
+//! vs split stepping, and padded tail batches are all bit-identical.
+//!
 //! Requires `make artifacts`; tests no-op otherwise (CI runs artifacts
-//! first; the donation matrix additionally runs this suite under
-//! `SPLITFED_NO_DONATE={0,1}`).  Residency and donation are selected
+//! first; the env matrix additionally runs this suite under
+//! `SPLITFED_NO_DONATE={0,1}` x `SPLITFED_NO_PREFETCH={0,1}`).
+//! Residency, donation, prefetch, and split-stepping are selected
 //! per-instance via `ModelOps::with_weight_residency` /
-//! `ModelOps::with_donation`, never via the environment, so all paths
-//! can run in one process without racing.
+//! `ModelOps::with_donation` / `ModelOps::with_pipeline`, never via the
+//! environment, so all paths can run in one process without racing.
 
 use std::path::PathBuf;
 
@@ -150,7 +155,25 @@ fn ssfl_run_donate(rt: &Runtime, device: bool, donate: bool, threads: usize) -> 
     );
     let val = synthetic::generate(cfg.test_samples, cfg.seed ^ 1);
     let test = synthetic::generate(cfg.test_samples, cfg.seed ^ 2);
-    let mut ctx = TrainCtx::with_profile(&cfg, &ops, ComputeProfile::synthetic_default());
+    let mut ctx =
+        TrainCtx::with_profile(&cfg, &ops, ComputeProfile::synthetic_default()).expect("ctx");
+    algos::ssfl::run_with_ctx(&mut ctx, &corpus, &val, &test).unwrap()
+}
+
+/// SSFL run with every pipeline knob explicit (prefetch + split-step on
+/// top of residency/donation) — the prefetch acceptance matrix's
+/// harness.
+fn ssfl_run_pipeline(rt: &Runtime, prefetch: bool, split: bool, threads: usize) -> RunResult {
+    let ops = ModelOps::with_pipeline(rt, true, true, prefetch, split);
+    let cfg = four_shard_cfg(Algo::Ssfl, threads);
+    let corpus = synthetic::generate(
+        cfg.nodes * (cfg.samples_per_node + cfg.val_per_node + 8),
+        cfg.seed,
+    );
+    let val = synthetic::generate(cfg.test_samples, cfg.seed ^ 1);
+    let test = synthetic::generate(cfg.test_samples, cfg.seed ^ 2);
+    let mut ctx =
+        TrainCtx::with_profile(&cfg, &ops, ComputeProfile::synthetic_default()).expect("ctx");
     algos::ssfl::run_with_ctx(&mut ctx, &corpus, &val, &test).unwrap()
 }
 
@@ -247,6 +270,109 @@ fn ssfl_donation_bit_identical_at_1_and_4_threads() {
         let r = ssfl_run_donate(&rt, true, donate, threads);
         assert_runs_identical(&reference, &r, what);
     }
+}
+
+/// One epoch-loop sweep through `ModelOps::train_epochs_staged` with
+/// every knob explicit, over a dataset with a **partial tail** batch
+/// (`3*b + 7` rows) so the padded-tail path is always exercised:
+/// 2 epochs, merged stats + staged eval + final digests.
+fn epochs_sweep(rt: &Runtime, device: bool, prefetch: bool, split: bool) -> SweepOut {
+    let ops = ModelOps::with_pipeline(rt, device, true, prefetch, split);
+    let (client, server) = ops.init_models().unwrap();
+    let b = ops.train_batch_size();
+    let ds = synthetic::generate(3 * b + 7, 0x5EED);
+    let mut cdev = ops.stage_owned(client).unwrap();
+    let mut sdev = ops.stage_owned(server).unwrap();
+    let st = ops
+        .train_epochs_staged(&mut cdev, &mut sdev, &ds, 2, 0.05)
+        .unwrap();
+    let ev = ops.evaluate_staged(&cdev, &sdev, &ds).unwrap();
+    let cb = cdev.into_bundle(ops.runtime()).unwrap();
+    let sb = sdev.into_bundle(ops.runtime()).unwrap();
+    SweepOut {
+        digest: format!("{}:{}", hex_digest(&cb.digest()), hex_digest(&sb.digest())),
+        stats: vec![(st.loss_sum, st.correct_sum, st.wsum)],
+        eval: (ev.loss, ev.accuracy),
+    }
+}
+
+/// The tentpole's numerics gate: the pipelined prefetch loop produces
+/// the same bits as the synchronous device loop and as the literal
+/// reference — including on a dataset whose last batch is padded
+/// (prefetched tail batches must not double-count or mis-weight).
+#[test]
+fn prefetch_pipeline_matches_synchronous_and_literal() {
+    let rt = match runtime() {
+        Some(rt) => rt,
+        None => return,
+    };
+    let lit = epochs_sweep(&rt, false, false, false);
+    let sync = epochs_sweep(&rt, true, false, false);
+    let pipe = epochs_sweep(&rt, true, true, false);
+    assert_sweeps_identical(&sync, &pipe, "sync vs prefetch epochs");
+    assert_sweeps_identical(&lit, &pipe, "literal vs prefetch epochs");
+}
+
+/// The split three-entry step (`client_forward` → `server_train_step` →
+/// `client_backward`, activations/gradients device-resident, weights
+/// donated per half) is bit-identical to the fused step — on the buffer
+/// path with and without prefetch, and against the literal split path.
+#[test]
+fn split_step_matches_fused_step() {
+    let rt = match runtime() {
+        Some(rt) => rt,
+        None => return,
+    };
+    let fused = epochs_sweep(&rt, true, true, false);
+    let split_pipe = epochs_sweep(&rt, true, true, true);
+    let split_sync = epochs_sweep(&rt, true, false, true);
+    let split_lit = epochs_sweep(&rt, false, false, true);
+    assert_sweeps_identical(&fused, &split_pipe, "fused vs split (prefetch)");
+    assert_sweeps_identical(&fused, &split_sync, "fused vs split (sync)");
+    assert_sweeps_identical(&fused, &split_lit, "fused vs split (literal)");
+}
+
+/// The prefetch acceptance matrix: {prefetch on, off} x {threads=1,
+/// threads=4} all produce one identical SSFL run — the upload pipeline
+/// composes with shard parallelism without touching numerics.
+#[test]
+fn ssfl_prefetch_bit_identical_at_1_and_4_threads() {
+    let rt = match runtime() {
+        Some(rt) => rt,
+        None => return,
+    };
+    let reference = ssfl_run_pipeline(&rt, false, false, 1);
+    for (prefetch, threads, what) in [
+        (true, 1, "prefetch t1 vs sync t1"),
+        (false, 4, "sync t4 vs sync t1"),
+        (true, 4, "prefetch t4 vs sync t1"),
+    ] {
+        let r = ssfl_run_pipeline(&rt, prefetch, false, threads);
+        assert_runs_identical(&reference, &r, what);
+    }
+}
+
+/// Tail-weighting regression (satellite of the `fill_batch` audit): an
+/// evaluation over a dataset whose last chunk is padded must count each
+/// real row exactly once — `n` equals the dataset size, never the
+/// padded batch total — on the literal and staged paths alike.
+#[test]
+fn eval_counts_each_tail_row_exactly_once() {
+    let rt = match runtime() {
+        Some(rt) => rt,
+        None => return,
+    };
+    let ops = ModelOps::new(&rt);
+    let (client, server) = ops.init_models().unwrap();
+    let n = ops.eval_batch_size() + 3; // forces one full + one padded chunk
+    let ds = synthetic::generate(n, 0x7A11);
+    let ev = ops.evaluate(&client, &server, &ds).unwrap();
+    assert!(ev.n == n as f64, "literal eval n = {} for {n} rows", ev.n);
+    let cdev = ops.stage_owned(client).unwrap();
+    let sdev = ops.stage_owned(server).unwrap();
+    let evs = ops.evaluate_staged(&cdev, &sdev, &ds).unwrap();
+    assert!(evs.n == n as f64, "staged eval n = {} for {n} rows", evs.n);
+    assert!(ev.loss == evs.loss && ev.accuracy == evs.accuracy, "tail eval path equality");
 }
 
 /// Reuse-after-donate is refused at the bundle layer: once a step has

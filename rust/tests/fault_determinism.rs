@@ -166,7 +166,7 @@ fn ssfl_survives_faults_and_stays_thread_deterministic() {
     for threads in [1usize, 4] {
         let cfg = faulty_run_cfg(Algo::Ssfl, threads);
         let (corpus, val, test) = datasets(&cfg);
-        let mut ctx = TrainCtx::with_profile(&cfg, &ops, prof);
+        let mut ctx = TrainCtx::with_profile(&cfg, &ops, prof).expect("ctx");
         results.push(algos::ssfl::run_with_ctx(&mut ctx, &corpus, &val, &test).unwrap());
     }
     // completes all rounds despite dropout + shard crash (no panic, no
@@ -192,7 +192,7 @@ fn bsfl_survives_faults_and_ledger_stays_thread_deterministic() {
     for threads in [1usize, 4] {
         let cfg = faulty_run_cfg(Algo::Bsfl, threads);
         let (corpus, val, test) = datasets(&cfg);
-        let mut ctx = TrainCtx::with_profile(&cfg, &ops, prof);
+        let mut ctx = TrainCtx::with_profile(&cfg, &ops, prof).expect("ctx");
         let (r, art) = algos::bsfl::run_with_ctx(&mut ctx, &corpus, &val, &test).unwrap();
         art.chain.verify().unwrap();
         tips.push((art.chain.len(), art.chain.tip_hash()));
@@ -228,7 +228,7 @@ fn inactive_faults_match_pre_fault_baseline() {
         }
         cfg.validate().unwrap();
         let (corpus, val, test) = datasets(&cfg);
-        let mut ctx = TrainCtx::with_profile(&cfg, &ops, prof);
+        let mut ctx = TrainCtx::with_profile(&cfg, &ops, prof).expect("ctx");
         results.push(algos::ssfl::run_with_ctx(&mut ctx, &corpus, &val, &test).unwrap());
     }
     assert_runs_identical(&results[0], &results[1], "inert fault knobs");

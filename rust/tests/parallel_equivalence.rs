@@ -100,7 +100,7 @@ fn ssfl_threads_do_not_change_numerics() {
     for threads in [1usize, 4] {
         let cfg = four_shard_cfg(Algo::Ssfl, threads);
         let (corpus, val, test) = datasets(&cfg);
-        let mut ctx = TrainCtx::with_profile(&cfg, &ops, prof);
+        let mut ctx = TrainCtx::with_profile(&cfg, &ops, prof).expect("ctx");
         results.push(algos::ssfl::run_with_ctx(&mut ctx, &corpus, &val, &test).unwrap());
     }
     assert_runs_identical(&results[0], &results[1], "ssfl t1 vs t4");
@@ -120,7 +120,7 @@ fn bsfl_threads_do_not_change_numerics_or_ledger() {
     for threads in [1usize, 4] {
         let cfg = four_shard_cfg(Algo::Bsfl, threads);
         let (corpus, val, test) = datasets(&cfg);
-        let mut ctx = TrainCtx::with_profile(&cfg, &ops, prof);
+        let mut ctx = TrainCtx::with_profile(&cfg, &ops, prof).expect("ctx");
         let (r, art) = algos::bsfl::run_with_ctx(&mut ctx, &corpus, &val, &test).unwrap();
         art.chain.verify().unwrap();
         tips.push((art.chain.len(), art.chain.tip_hash()));
@@ -147,7 +147,7 @@ fn threads_beyond_shards_are_harmless() {
     for threads in [1usize, 16] {
         let cfg = four_shard_cfg(Algo::Ssfl, threads);
         let (corpus, val, test) = datasets(&cfg);
-        let mut ctx = TrainCtx::with_profile(&cfg, &ops, prof);
+        let mut ctx = TrainCtx::with_profile(&cfg, &ops, prof).expect("ctx");
         results.push(algos::ssfl::run_with_ctx(&mut ctx, &corpus, &val, &test).unwrap());
     }
     assert_runs_identical(&results[0], &results[1], "ssfl t1 vs t16");

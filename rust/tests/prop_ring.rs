@@ -1,0 +1,127 @@
+//! Properties of the prefetch staging ring (`runtime::staging::Ring`) —
+//! no PJRT artifacts needed.  These pin the safety argument the upload
+//! pipeline leans on:
+//!
+//! * an in-flight slot is never overwritten — push on a full ring hands
+//!   the *same* item back and leaves the queued slots untouched;
+//! * a popped (donated-to-a-step) item is never handed out again;
+//! * drop order can't leak: whatever the pipeline never consumed —
+//!   queued slots on an early (step-error) exit included — is dropped
+//!   exactly once, tracked by a live-count on every item.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use splitfed::runtime::Ring;
+use splitfed::util::quickcheck::forall_res;
+
+/// Drop-counting stand-in for a `StagedBatch`: `live` counts every
+/// constructed-but-not-yet-dropped item, so leaks and double-drops both
+/// show up as a live-count drift.
+struct Tracked {
+    id: u64,
+    live: Rc<Cell<i64>>,
+}
+
+impl Tracked {
+    fn new(id: u64, live: &Rc<Cell<i64>>) -> Tracked {
+        live.set(live.get() + 1);
+        Tracked {
+            id,
+            live: Rc::clone(live),
+        }
+    }
+}
+
+impl Drop for Tracked {
+    fn drop(&mut self) {
+        self.live.set(self.live.get() - 1);
+    }
+}
+
+#[test]
+fn ring_behaves_like_bounded_fifo_and_never_leaks() {
+    forall_res(
+        0x4156_0001,
+        400,
+        |r| {
+            let cap = 1 + r.below(4);
+            let n = 4 + r.below(40);
+            // true = push, false = pop; `cut` simulates a mid-loop step
+            // error: the run abandons the ring there and everything
+            // still queued must free on drop.
+            let ops: Vec<bool> = (0..n).map(|_| r.below(3) > 0).collect();
+            let cut = r.below(n + 1);
+            (cap, ops, cut)
+        },
+        |case: &(usize, Vec<bool>, usize)| {
+            let (cap, ops, cut) = case;
+            let live = Rc::new(Cell::new(0i64));
+            let mut ring: Ring<Tracked> = Ring::new(*cap);
+            let mut model: VecDeque<u64> = VecDeque::new();
+            let mut handed_out: Vec<u64> = Vec::new();
+            let mut next_id = 0u64;
+            for (i, &is_push) in ops.iter().enumerate() {
+                if i == *cut {
+                    break;
+                }
+                if is_push {
+                    let id = next_id;
+                    next_id += 1;
+                    match ring.push(Tracked::new(id, &live)) {
+                        Ok(()) => {
+                            if model.len() >= *cap {
+                                return Err(format!("push #{id} accepted beyond capacity {cap}"));
+                            }
+                            model.push_back(id);
+                        }
+                        Err(back) => {
+                            if model.len() < *cap {
+                                return Err(format!("push #{id} refused with free space"));
+                            }
+                            if back.id != id {
+                                return Err(format!(
+                                    "full ring returned item #{} for pushed #{id} \
+                                     (a queued slot was overwritten)",
+                                    back.id
+                                ));
+                            }
+                        }
+                    }
+                } else {
+                    let got = ring.pop().map(|t| t.id);
+                    if got != model.pop_front() {
+                        return Err(format!("pop order diverged from FIFO model: {got:?}"));
+                    }
+                    if let Some(id) = got {
+                        if handed_out.contains(&id) {
+                            return Err(format!("item #{id} handed out twice"));
+                        }
+                        handed_out.push(id);
+                    }
+                }
+                if ring.len() != model.len() {
+                    return Err(format!("len {} != model {}", ring.len(), model.len()));
+                }
+                // every live item is accounted for by a ring slot (popped
+                // items dropped on consumption above, refused ones on
+                // refusal) — any drift is a leak or a double-drop
+                if live.get() != ring.len() as i64 {
+                    return Err(format!(
+                        "live count {} != queued {} (leak or double-drop)",
+                        live.get(),
+                        ring.len()
+                    ));
+                }
+            }
+            // the step-error exit: dropping the ring must free every
+            // still-queued item, nothing else
+            drop(ring);
+            if live.get() != 0 {
+                return Err(format!("{} items leaked after ring drop", live.get()));
+            }
+            Ok(())
+        },
+    );
+}

@@ -111,6 +111,6 @@ fn compute_profile_is_sane() {
         assert!(v > 0.0 && v < 60.0, "{name} = {v}s");
     }
     // message sizes from the manifest
-    assert_eq!(ops.grad_bytes(), 32 * 14 * 14 * 32 * 4);
-    assert!(ops.act_bytes() > ops.grad_bytes());
+    assert_eq!(ops.grad_bytes().unwrap(), 32 * 14 * 14 * 32 * 4);
+    assert!(ops.act_bytes().unwrap() > ops.grad_bytes().unwrap());
 }

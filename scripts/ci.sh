@@ -39,13 +39,18 @@ if [ "$NO_BENCH" = "1" ]; then
 elif [ ! -f artifacts/manifest.json ]; then
     echo "==> bench smoke skipped (artifacts/ not built; run 'make artifacts')"
 else
-    # Donation matrix: the buffer/donation equivalence suite must pass
-    # both with donated executables compiled (NO_DONATE=0) and with the
-    # escape hatch engaged (NO_DONATE=1, fresh-output fallback).
-    echo "==> donation matrix (buffer_equivalence under SPLITFED_NO_DONATE={0,1})"
+    # Env-hatch matrix: the buffer/donation/prefetch equivalence suite
+    # must pass with donated executables compiled (NO_DONATE=0) and with
+    # the escape hatch engaged (NO_DONATE=1, fresh-output fallback),
+    # crossed with the batch-upload pipeline on (NO_PREFETCH=0) and off
+    # (NO_PREFETCH=1, synchronous per-step uploads).
+    echo "==> env matrix (buffer_equivalence under SPLITFED_NO_DONATE={0,1} x SPLITFED_NO_PREFETCH={0,1})"
     for nd in 0 1; do
-        echo "    SPLITFED_NO_DONATE=$nd"
-        SPLITFED_NO_DONATE=$nd cargo test -q --test buffer_equivalence
+        for np in 0 1; do
+            echo "    SPLITFED_NO_DONATE=$nd SPLITFED_NO_PREFETCH=$np"
+            SPLITFED_NO_DONATE=$nd SPLITFED_NO_PREFETCH=$np \
+                cargo test -q --test buffer_equivalence
+        done
     done
 
     echo "==> bench smoke (SPLITFED_BENCH_SCALE=smoke runtime_exec)"
@@ -57,7 +62,9 @@ else
     # the record
     for field in host_transfer_bytes_per_step weight_transfer_bytes_per_step \
                  device_alloc_bytes_per_step weight_alloc_bytes_per_step \
-                 fresh_device_alloc_bytes_per_step donation_active; do
+                 fresh_device_alloc_bytes_per_step donation_active \
+                 batch_upload_bytes_per_step prefetch_overlap_s \
+                 prefetch_active; do
         grep -q "\"$field\"" "$ROUNDTIME" \
             || { echo "    FAIL: $ROUNDTIME lacks \"$field\""; exit 1; }
     done
