@@ -13,9 +13,11 @@
 //! allocation must be ~0) — synchronous vs pipelined batch upload
 //! (steady-state synchronous batch H2D must be ~0 with prefetch on; the
 //! staged bytes + producer upload time report the won-back overlap) —
-//! and `threads=1` vs `threads=N` round wall time for a 4-shard SSFL
-//! run — written as JSON under `results/bench/runtime_exec/` so
-//! successive PRs can compare.
+//! `threads=1` vs `threads=N` round wall time for a 4-shard SSFL run —
+//! and batched vs sequential multi-client dispatch (one stacked J-wide
+//! PJRT call per chunk-step instead of one per client-step; digests
+//! must match, `dispatches_per_round` drops ~J x) — written as JSON
+//! under `results/bench/runtime_exec/` so successive PRs can compare.
 
 mod bench_common;
 
@@ -324,6 +326,67 @@ fn main() -> anyhow::Result<()> {
     println!("  speedup              {:>8.2}x  (target >= 2x on >= 4 cores)", speedup);
     println!("  digests match        {digests_match}");
 
+    // ---- batched vs sequential multi-client dispatch ---------------------
+    // 1 shard x 4 clients: every round's client set fits one batched
+    // J=4 dispatch chunk, so batching collapses the shard round from
+    // one PJRT train call per client-step to one per chunk-step (~J x
+    // fewer).  Both runs share the fixed compute profile and must end
+    // bit-identical — that's the whole contract (see
+    // rust/tests/batched_equivalence.rs for the exhaustive matrix).
+    let mut bcfg = ExpConfig::paper_9(Algo::Ssfl);
+    bcfg.nodes = 5;
+    bcfg.shards = 1;
+    bcfg.clients_per_shard = 4;
+    bcfg.rounds = rounds;
+    bcfg.samples_per_node = spn;
+    bcfg.val_per_node = 32;
+    bcfg.test_samples = 128;
+    bcfg.seed = seed;
+    bcfg.threads = 1;
+    let bcorpus = synthetic::generate(bcfg.nodes * (spn + 40), seed ^ 0x61);
+    let batched_active = ops.batch_width(0) > 1;
+
+    let dispatched = |batch_clients: usize| -> anyhow::Result<(RunResult, f64, u64)> {
+        let mut cfg = bcfg.clone();
+        cfg.batch_clients = batch_clients;
+        let mut ctx = TrainCtx::with_profile(&cfg, &ops, ComputeProfile::synthetic_default())?;
+        rt.reset_timing();
+        let t0 = Instant::now();
+        let r = splitfed::algos::ssfl::run_with_ctx(&mut ctx, &bcorpus, &val, &test)?;
+        let wall = t0.elapsed().as_secs_f64();
+        // train dispatches = every PJRT call that stepped weights (the
+        // fused per-client entry or a stacked batched entry); eval and
+        // transfer pseudo-entries don't count.
+        let dispatches: u64 = rt
+            .timing()
+            .iter()
+            .filter(|(n, _)| n.as_str() == "full_train_step" || n.starts_with("batched_train_step"))
+            .map(|(_, t)| t.calls)
+            .sum();
+        Ok((r, wall, dispatches))
+    };
+    let (seq_run, seq_s, seq_dispatches) = dispatched(1)?;
+    let (bat_run, bat_s, bat_dispatches) = dispatched(0)?;
+    let batched_speedup = seq_s / bat_s.max(1e-9);
+    let batched_digests_match = seq_run.model_digest == bat_run.model_digest;
+    let dispatches_per_round = bat_dispatches as f64 / rounds as f64;
+    let dispatches_per_round_sequential = seq_dispatches as f64 / rounds as f64;
+
+    println!("\nbatched vs sequential client dispatch ({rounds}-round SSFL, 1 shard x 4 clients):");
+    println!(
+        "  sequential (J=1)     {:>8.2} s  {:>8.0} train dispatches/round",
+        seq_s, dispatches_per_round_sequential
+    );
+    println!(
+        "  batched    (auto)    {:>8.2} s  {:>8.0} train dispatches/round{}",
+        bat_s,
+        dispatches_per_round,
+        if batched_active { "" } else { "  (batching UNAVAILABLE — sequential fallback)" }
+    );
+    println!("  dispatch speedup     {:>8.2}x wall, {:.1}x fewer dispatches", batched_speedup,
+        dispatches_per_round_sequential / dispatches_per_round.max(1e-9));
+    println!("  digests match        {batched_digests_match}");
+
     let out_dir = Path::new("results/bench/runtime_exec");
     std::fs::create_dir_all(out_dir)?;
     // Per-entry timing block.  `min_s` is +inf until an entry's first
@@ -384,10 +447,16 @@ fn main() -> anyhow::Result<()> {
         ("batch_staged_bytes_per_step", num(pf.staged_bytes_step as f64)),
         ("prefetch_overlap_s", finite(pf.overlap_s)),
         ("prefetch_digests_match", Json::Bool(nopf.digest == pf.digest)),
+        ("batched_active", Json::Bool(batched_active)),
+        ("dispatches_per_round", num(dispatches_per_round)),
+        ("dispatches_per_round_sequential", num(dispatches_per_round_sequential)),
+        ("batched_speedup", num(batched_speedup)),
+        ("batched_digests_match", Json::Bool(batched_digests_match)),
         ("entries", entries_doc),
     ]);
     std::fs::write(out_dir.join("roundtime.json"), doc.to_string())?;
     println!("  wrote {}", out_dir.join("roundtime.json").display());
     anyhow::ensure!(digests_match, "threads=1 vs threads={par_threads} diverged");
+    anyhow::ensure!(batched_digests_match, "batched vs sequential dispatch diverged");
     Ok(())
 }

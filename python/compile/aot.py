@@ -178,6 +178,10 @@ def main() -> None:
             "inputs": [{"name": n, **s} for n, s in spec["inputs"]],
             "outputs": [{"name": n, **s} for n, s in spec["outputs"]],
         }
+        if "batch_clients" in spec:
+            # Lane width of a batched entry — the runtime discovers the
+            # compiled widths from this and chunks clients onto them.
+            entry_doc["batch_clients"] = spec["batch_clients"]
         print(f"lowered {name}: {len(text)} chars -> {fname}")
         if spec.get("donate"):
             dtext, aliases = lower_donated(name, spec)

@@ -26,6 +26,9 @@ Entry points lowered by aot.py (see `entry_points()` at the bottom):
   test evaluation, Algorithm 3 `Evaluate`).
 * ``full_train_step``   — fused client+server step (identical numerics to
   the split path; used by the SL fast path and as a cross-check in tests).
+* ``batched_train_step_j{1,2,4}`` — ``full_train_step`` over a leading
+  lane axis: J independent (client, server-copy) training lanes in one
+  dispatch, bit-identical per lane (see ``make_batched_train_step``).
 """
 
 import jax.numpy as jnp
@@ -233,6 +236,38 @@ def full_train_step(cw, cb, sw, sb, f1w, f1b, f2w, f2b, x, y, wts, lr):
     )
 
 
+def make_batched_train_step(j):
+    """Fused train step over a leading client axis of size ``j``.
+
+    Stacks ``j`` independent (client, server-copy) lanes into ONE XLA
+    dispatch: every weight input/output and batch input carries a leading
+    lane axis, and the returned stats are ``(j,)`` vectors.
+
+    Deliberately an *unrolled per-lane loop*, NOT ``jax.vmap``: vmapping
+    ``full_train_step`` turns the per-batch loss reduction into an axis-1
+    reduction over a ``(j, B)`` array, which XLA reduces in a different
+    association order — ``loss_sum`` drifts by ~1e-5 from the sequential
+    path.  Slicing each lane and calling ``full_train_step`` per lane
+    keeps every lane's op sequence identical to a sequential call, so the
+    batched path is **bit-identical** per lane (the property
+    ``rust/tests/batched_equivalence.rs`` asserts end to end).  XLA still
+    schedules the ``j`` independent lane subgraphs inside one dispatch —
+    the per-dispatch overhead is paid once instead of ``j`` times.
+    """
+
+    def batched_train_step(cw, cb, sw, sb, f1w, f1b, f2w, f2b, x, y, wts, lr):
+        stacked = (cw, cb, sw, sb, f1w, f1b, f2w, f2b)
+        outs = [
+            full_train_step(*(s[i] for s in stacked), x[i], y[i], wts[i], lr)
+            for i in range(j)
+        ]
+        return tuple(
+            jnp.stack([o[k] for o in outs]) for k in range(len(outs[0]))
+        )
+
+    return batched_train_step
+
+
 # ---------------------------------------------------------------------------
 # AOT entry-point registry (consumed by aot.py)
 # ---------------------------------------------------------------------------
@@ -245,11 +280,35 @@ def _si(*shape):
     return {"shape": list(shape), "dtype": "s32"}
 
 
-def entry_points(train_b=TRAIN_BATCH, eval_b=EVAL_BATCH, eval_b_small=EVAL_BATCH_SMALL):
+def _stk(j, spec):
+    """Spec with a leading lane axis of size ``j`` prepended."""
+    return {"shape": [j] + spec["shape"], "dtype": spec["dtype"]}
+
+
+# Lane widths lowered for the batched train step.  Arbitrary client
+# counts chunk greedily onto these at run time (a tail chunk narrower
+# than the width pads its spare lanes with zero-weight rows); widths
+# beyond 4 buy little — dispatch overhead amortizes fast while compile
+# time and stacked-weight memory grow linearly.
+BATCH_CLIENTS = (1, 2, 4)
+
+
+def entry_points(
+    train_b=TRAIN_BATCH,
+    eval_b=EVAL_BATCH,
+    eval_b_small=EVAL_BATCH_SMALL,
+    batch_clients=BATCH_CLIENTS,
+):
     """Build the lowering manifest: name -> (fn, input specs, output specs).
 
     Input/output specs are ordered; the Rust runtime mirrors this order
     exactly when packing literals.
+
+    ``batched_train_step_j<J>`` entries (one per width in
+    ``batch_clients``) carry a ``batch_clients`` key: the lane count J of
+    their leading axis.  They stack J independent (client, server-copy)
+    training lanes into one dispatch, bit-identical per lane to
+    ``full_train_step`` (see ``make_batched_train_step``).
 
     Entries whose signature is weight-in/weight-out additionally carry
     ``donate``: the input slots (always the leading weight parameters)
@@ -270,7 +329,36 @@ def entry_points(train_b=TRAIN_BATCH, eval_b=EVAL_BATCH, eval_b_small=EVAL_BATCH
         ("f2w", _s(FC1, CLASSES)),
         ("f2b", _s(CLASSES)),
     ]
+    weight_shapes = client_shapes + server_shapes
+    batched = {
+        f"batched_train_step_j{j}": {
+            "fn": make_batched_train_step(j),
+            # Lane count, recorded in the manifest so the runtime can
+            # discover the compiled widths and chunk clients onto them.
+            "batch_clients": j,
+            "inputs": [(n, _stk(j, s)) for n, s in weight_shapes]
+            + [
+                ("x", _stk(j, _s(B, IMG, IMG, IN_CH))),
+                ("y", _stk(j, _si(B))),
+                ("wts", _stk(j, _s(B))),
+                ("lr", _s()),
+            ],
+            "outputs": [
+                ("loss_sum", _s(j)),
+                ("correct_sum", _s(j)),
+                ("wsum", _s(j)),
+            ]
+            + [(n + "_new", _stk(j, s)) for n, s in weight_shapes],
+            # Every stacked weight slot donates onto its stacked output
+            # (all eight stacked shapes are distinct, so jax's alias
+            # matching is unambiguous) — the chunk loop updates the
+            # whole lane stack in place, step after step.
+            "donate": list(range(len(weight_shapes))),
+        }
+        for j in batch_clients
+    }
     return {
+        **batched,
         "client_forward": {
             "fn": client_forward,
             "inputs": client_shapes + [("x", _s(B, IMG, IMG, IN_CH))],

@@ -32,6 +32,9 @@ def test_donated_lowering_carries_full_alias_map():
         "full_train_step",
         "server_train_step",
         "client_backward",
+        "batched_train_step_j1",
+        "batched_train_step_j2",
+        "batched_train_step_j4",
     }
     for name, spec in donating.items():
         text, aliases = aot.lower_donated(name, spec)

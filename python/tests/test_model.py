@@ -66,6 +66,45 @@ def test_split_equals_fused():
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+def test_batched_lanes_equal_sequential_steps():
+    """batched_train_step_j{J} must be bit-identical, per lane, to J
+    separate full_train_step calls — including a zero-weight lane (whose
+    weights must come back unchanged, stats all zero)."""
+    rng = np.random.default_rng(14)
+    J = 2
+    lanes = []
+    for j in range(J):
+        c, s = _params(5 + j)
+        x, y, wts = _batch(rng, 8)
+        if j == J - 1:
+            wts = jnp.zeros_like(wts)  # padded lane: zero-weight rows
+        lanes.append(([*c.values(), *s.values()], x, y, wts))
+    lr = jnp.float32(0.05)
+
+    seq = [
+        jax.jit(model.full_train_step)(*w, x, y, wts, lr)
+        for (w, x, y, wts) in lanes
+    ]
+    stacked = [jnp.stack([lanes[j][0][k] for j in range(J)]) for k in range(8)]
+    bat = jax.jit(model.make_batched_train_step(J))(
+        *stacked,
+        jnp.stack([l[1] for l in lanes]),
+        jnp.stack([l[2] for l in lanes]),
+        jnp.stack([l[3] for l in lanes]),
+        lr,
+    )
+    for k in range(len(bat)):
+        for j in range(J):
+            np.testing.assert_array_equal(
+                np.asarray(bat[k][j]), np.asarray(seq[j][k]), err_msg=f"out {k} lane {j}"
+            )
+    # the zero-weight lane changed nothing and contributed no stats
+    for k in range(3):
+        assert float(bat[k][J - 1]) == 0.0, k
+    for k, w0 in enumerate(lanes[J - 1][0]):
+        np.testing.assert_array_equal(np.asarray(bat[3 + k][J - 1]), np.asarray(w0))
+
+
 def test_manual_vjp_matches_autodiff():
     """The hand-derived backward equals jax.grad of the reference model on
     every parameter tensor."""

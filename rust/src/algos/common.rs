@@ -241,10 +241,71 @@ pub fn train_client_on_staged_server(
     Ok(stats)
 }
 
+/// Train the given member slots of one shard round in `width`-wide
+/// chunks, each chunk one stacked PJRT dispatch per step
+/// ([`ModelOps::train_chunk_staged`]).  Slots may be scattered (the
+/// fault path trains participating members only), so each chunk's
+/// client bundles are moved out into a contiguous slice and restored
+/// as soon as the chunk trains — training errors are fatal run-aborts
+/// throughout this crate, so bundles are only restored on success.
+///
+/// Numerics, stats merge order, and split-protocol traffic accounting
+/// are identical to the sequential per-client path: lanes train on
+/// private server copies, lane stats come back in lane order (= member
+/// order within a chunk), and each member's activation/gradient
+/// messages are tallied per batch exactly as
+/// [`train_client_on_staged_server`] does.  Proven bit-identical by
+/// `rust/tests/batched_equivalence.rs`.
+///
+/// Returns (per-slot server copies in slot order, summed stats, max
+/// batches any slot contributed).
+fn train_slots_batched(
+    s: &mut ShardCtx<'_>,
+    width: usize,
+    server_model: &Bundle,
+    client_models: &mut [Bundle],
+    members: &[&Node],
+    slots: &[usize],
+) -> Result<(Vec<Bundle>, StepStats, usize)> {
+    let mut stats = StepStats::default();
+    let mut server_copies: Vec<Bundle> = Vec::with_capacity(slots.len());
+    let mut max_batches = 0usize;
+    for chunk in slots.chunks(width) {
+        let mut cms: Vec<Bundle> = chunk
+            .iter()
+            .map(|&slot| std::mem::replace(&mut client_models[slot], Bundle::empty()))
+            .collect();
+        let mut copies = vec![server_model.clone(); chunk.len()];
+        let datasets: Vec<&Dataset> = chunk.iter().map(|&slot| &members[slot].train).collect();
+        let lane_stats = s.ops.train_chunk_staged(
+            width,
+            &mut cms,
+            &mut copies,
+            &datasets,
+            s.cfg.local_epochs,
+            s.cfg.lr,
+        )?;
+        for ((&slot, cm), st) in chunk.iter().zip(cms).zip(lane_stats) {
+            client_models[slot] = cm;
+            stats.merge(st);
+            s.record_shard_traffic(s.batches_per_client(members[slot]));
+            max_batches = max_batches.max(s.batches_per_client(members[slot]));
+        }
+        server_copies.extend(copies);
+    }
+    Ok((server_copies, stats, max_batches))
+}
+
 /// One SFL round inside a shard (Algorithm 1 `TrainingCycle`):
 /// every client trains in parallel against its own copy of the shard
 /// server model; afterwards the shard server averages its copies and the
 /// caller decides what to do with the updated client models.
+///
+/// When the runtime compiled batched train-step entries (and
+/// `--batch-clients` / `SPLITFED_NO_BATCHED` allow it), same-shard
+/// clients are grouped into J-wide chunks that train through one
+/// stacked dispatch per step — bit-identical to the per-client path,
+/// just fewer PJRT calls.
 ///
 /// Returns (updated per-client models, new shard server model, stats,
 /// virtual round seconds).
@@ -255,17 +316,23 @@ pub fn run_shard_round(
     clients: &[&Node],
 ) -> Result<(Bundle, StepStats, f64)> {
     assert_eq!(client_models.len(), clients.len());
-    let mut stats = StepStats::default();
-    let mut server_copies: Vec<Bundle> = Vec::with_capacity(clients.len());
-    let mut max_batches = 0usize;
-
-    for (cm, node) in client_models.iter_mut().zip(clients.iter()) {
-        let mut copy = server_model.clone();
-        let st = train_client_on_server_copy(ctx, cm, &mut copy, node)?;
-        stats.merge(st);
-        server_copies.push(copy);
-        max_batches = max_batches.max(ctx.batches_per_client(node));
-    }
+    let width = ctx.ops.batch_width(ctx.cfg.batch_clients);
+    let (server_copies, stats, max_batches) = if width > 1 && clients.len() > 1 {
+        let slots: Vec<usize> = (0..clients.len()).collect();
+        train_slots_batched(ctx, width, server_model, client_models, clients, &slots)?
+    } else {
+        let mut stats = StepStats::default();
+        let mut server_copies: Vec<Bundle> = Vec::with_capacity(clients.len());
+        let mut max_batches = 0usize;
+        for (cm, node) in client_models.iter_mut().zip(clients.iter()) {
+            let mut copy = server_model.clone();
+            let st = train_client_on_server_copy(ctx, cm, &mut copy, node)?;
+            stats.merge(st);
+            server_copies.push(copy);
+            max_batches = max_batches.max(ctx.batches_per_client(node));
+        }
+        (server_copies, stats, max_batches)
+    };
 
     // W^S_{i,r+1} = mean_j W^S_{i,j,r}  (Algorithm 1 line 14)
     let refs: Vec<&Bundle> = server_copies.iter().collect();
@@ -424,19 +491,39 @@ pub fn run_shard_cycle(
 
     let (participated, faults) = classify_members(&mut s, plan, round, members, dead);
     let quorum_met = faults.participants >= plan.quorum_needed(members.len());
+    let width = ctx.ops.batch_width(ctx.cfg.batch_clients);
     for _ in 0..ctx.cfg.inner_rounds {
         if quorum_met {
-            let mut server_copies: Vec<Bundle> = Vec::new();
-            for (slot, node) in members.iter().enumerate() {
-                if !participated[slot] {
-                    continue;
-                }
-                let mut copy = server_i.clone();
-                let st =
-                    train_client_on_server_copy(&mut s, &mut client_models[slot], &mut copy, node)?;
+            // survivors only — the chunking sees the same (possibly
+            // scattered) slot sequence the sequential loop iterates
+            let slots: Vec<usize> =
+                (0..members.len()).filter(|&slot| participated[slot]).collect();
+            let server_copies: Vec<Bundle> = if width > 1 && slots.len() > 1 {
+                let (copies, st, _) = train_slots_batched(
+                    &mut s,
+                    width,
+                    &server_i,
+                    &mut client_models,
+                    members,
+                    &slots,
+                )?;
                 stats.merge(st);
-                server_copies.push(copy);
-            }
+                copies
+            } else {
+                let mut copies: Vec<Bundle> = Vec::with_capacity(slots.len());
+                for &slot in &slots {
+                    let mut copy = server_i.clone();
+                    let st = train_client_on_server_copy(
+                        &mut s,
+                        &mut client_models[slot],
+                        &mut copy,
+                        members[slot],
+                    )?;
+                    stats.merge(st);
+                    copies.push(copy);
+                }
+                copies
+            };
             if !server_copies.is_empty() {
                 let refs: Vec<&Bundle> = server_copies.iter().collect();
                 server_i = crate::aggregation::fedavg(&refs)?;

@@ -111,6 +111,13 @@ pub struct ExpConfig {
     /// `threads = 1` and `threads = N` are bit-identical (asserted by
     /// `rust/tests/parallel_equivalence.rs`).
     pub threads: usize,
+    /// Clients stacked into one batched PJRT dispatch per shard-round
+    /// chunk (0 = auto: the widest compiled batched entry; 1 = one
+    /// dispatch per client).  Never changes numerics — batched and
+    /// sequential dispatch are bit-identical (asserted by
+    /// `rust/tests/batched_equivalence.rs`), and `SPLITFED_NO_BATCHED=1`
+    /// forces the sequential path regardless of this knob.
+    pub batch_clients: usize,
     /// Early-stop patience in rounds (None = run all rounds).
     pub patience: Option<usize>,
     /// Failure-model knobs (all off by default; see `fault` module).
@@ -147,6 +154,7 @@ impl Default for ExpConfig {
             // whole classes once server nodes' data goes unused).
             partition: Partition::Dirichlet(0.5),
             threads: 0,
+            batch_clients: 0,
             patience: None,
             fault: FaultConfig::default(),
             artifacts_dir: PathBuf::from("artifacts"),
@@ -304,6 +312,9 @@ impl ExpConfig {
         self.test_samples = a.get_usize("test-samples", self.test_samples).map_err(err)?;
         self.seed = a.get_u64("seed", self.seed).map_err(err)?;
         self.threads = a.get_usize("threads", self.threads).map_err(err)?;
+        self.batch_clients = a
+            .get_usize("batch-clients", self.batch_clients)
+            .map_err(err)?;
         self.attack_fraction = a
             .get_f64("attack-fraction", self.attack_fraction)
             .map_err(err)?;
@@ -424,6 +435,7 @@ mod tests {
             [
                 "--preset", "paper36", "--algo", "bsfl", "--rounds", "5",
                 "--lr", "0.1", "--attack-fraction", "0.47",
+                "--batch-clients", "2",
             ]
             .iter()
             .map(|s| s.to_string()),
@@ -436,6 +448,7 @@ mod tests {
         assert_eq!(cfg.nodes, 36);
         assert_eq!(cfg.rounds, 5);
         assert!((cfg.attack_fraction - 0.47).abs() < 1e-12);
+        assert_eq!(cfg.batch_clients, 2);
     }
 
     #[test]

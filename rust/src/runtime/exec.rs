@@ -220,6 +220,11 @@ pub struct Runtime {
     /// whose manifest has a `donation` block.  Empty when
     /// `SPLITFED_NO_DONATE=1` skipped compiling them.
     donate_exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// Compiled batched train-step widths: lane count J -> entry name
+    /// (`batched_train_step_j<J>`).  Empty when the artifact set has no
+    /// batched entries or `SPLITFED_NO_BATCHED=1` skipped them — the
+    /// shard round then falls back to one dispatch per client.
+    batched: BTreeMap<usize, String>,
     timing: Mutex<BTreeMap<String, EntryTiming>>,
     /// `Some` when `SPLITFED_SERIAL_EXEC=1`: a client-wide lock taken
     /// around every execution (both paths) — PJRT misbehavior under
@@ -259,6 +264,14 @@ impl Runtime {
         if no_donate {
             crate::info!("SPLITFED_NO_DONATE set: donated executables disabled (fresh-output path)");
         }
+        let no_batched = std::env::var("SPLITFED_NO_BATCHED")
+            .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+            .unwrap_or(false);
+        if no_batched {
+            crate::info!(
+                "SPLITFED_NO_BATCHED set: batched train-step entries skipped (per-client dispatch)"
+            );
+        }
         let compile_file = |name: &str, file: &str| -> Result<xla::PjRtLoadedExecutable> {
             let path = dir.join(file);
             let t0 = Instant::now();
@@ -276,13 +289,20 @@ impl Runtime {
         };
         let mut exes = BTreeMap::new();
         let mut donate_exes = BTreeMap::new();
+        let mut batched = BTreeMap::new();
         for (name, entry) in &manifest.entries {
+            if entry.batch_clients.is_some() && no_batched {
+                continue;
+            }
             exes.insert(name.clone(), compile_file(name, &entry.file)?);
             if let Some(don) = entry.donation.as_ref().filter(|_| !no_donate) {
                 donate_exes.insert(
                     name.clone(),
                     compile_file(&format!("{name} (donated)"), &don.file)?,
                 );
+            }
+            if let Some(j) = entry.batch_clients {
+                batched.insert(j, name.clone());
             }
         }
         let serialize_exec = std::env::var("SPLITFED_SERIAL_EXEC")
@@ -296,9 +316,23 @@ impl Runtime {
             manifest,
             exes,
             donate_exes,
+            batched,
             timing: Mutex::new(BTreeMap::new()),
             serial: serialize_exec.then(|| Mutex::new(())),
         })
+    }
+
+    /// The compiled batched train-step lane widths, ascending.  Empty
+    /// when the artifacts predate batched entries or under
+    /// `SPLITFED_NO_BATCHED=1`.
+    pub fn batched_widths(&self) -> Vec<usize> {
+        self.batched.keys().copied().collect()
+    }
+
+    /// The entry name of the batched train step with lane width `j`, if
+    /// one was compiled.
+    pub fn batched_entry(&self, j: usize) -> Option<&str> {
+        self.batched.get(&j).map(String::as_str)
     }
 
     /// Whether `entry` has a donated (in-place weight update) executable

@@ -76,6 +76,12 @@ pub struct EntrySpec {
     /// was lowered (`<entry>.donate.hlo.txt`); absent in older artifact
     /// sets, which simply fall back to fresh-output execution.
     pub donation: Option<DonationSpec>,
+    /// Lane width of a batched entry (`batched_train_step_j<J>`): J
+    /// independent client/server-copy training lanes per dispatch, with
+    /// every weight and batch tensor carrying a leading axis of size J.
+    /// `None` for ordinary single-client entries and older artifact
+    /// sets (which simply have no batched path to compile).
+    pub batch_clients: Option<usize>,
 }
 
 /// The whole manifest.
@@ -224,6 +230,26 @@ impl Manifest {
                 ),
                 None => None,
             };
+            let batch_clients = match e.get("batch_clients") {
+                Some(j) => {
+                    let j = j
+                        .as_usize()
+                        .filter(|&j| j >= 1)
+                        .ok_or_else(|| anyhow!("{name}: bad batch_clients"))?;
+                    // every input except the scalar lr must lead with J
+                    for s in &inputs {
+                        if s.name != "lr" && s.shape.first() != Some(&j) {
+                            bail!(
+                                "{name}: batch_clients={j} but input {} has shape {:?}",
+                                s.name,
+                                s.shape
+                            );
+                        }
+                    }
+                    Some(j)
+                }
+                None => None,
+            };
             entries.insert(
                 name.clone(),
                 EntrySpec {
@@ -235,6 +261,7 @@ impl Manifest {
                     inputs,
                     outputs,
                     donation,
+                    batch_clients,
                 },
             );
         }
@@ -376,6 +403,37 @@ mod tests {
         // eval entries have no weight outputs, so no donation variant
         assert!(m.entry("evaluate").unwrap().donation.is_none());
         assert!(artifacts_dir().join(&don.file).exists());
+    }
+
+    #[test]
+    fn batched_entries_parse_with_stacked_shapes() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let fused = m.entry("full_train_step").unwrap();
+        assert_eq!(fused.batch_clients, None);
+        for j in [1usize, 2, 4] {
+            let e = m.entry(&format!("batched_train_step_j{j}")).unwrap();
+            assert_eq!(e.batch_clients, Some(j));
+            // stacked weights + x/y/wts lead with J; lr stays scalar
+            for s in &e.inputs {
+                if s.name == "lr" {
+                    assert!(s.shape.is_empty());
+                } else {
+                    assert_eq!(s.shape[0], j, "{} not stacked", s.name);
+                }
+            }
+            // per-lane stats are (J,) vectors; new weights stacked
+            assert_eq!(e.outputs[0].name, "loss_sum");
+            assert_eq!(e.outputs[0].shape, vec![j]);
+            let don = e.donation.as_ref().expect("batched donation");
+            assert_eq!(
+                don.aliases.len(),
+                m.client_params.len() + m.server_params.len()
+            );
+        }
     }
 
     #[test]

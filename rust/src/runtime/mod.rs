@@ -13,7 +13,9 @@
 //!   boundaries.
 //! * [`staging`] — the batch-prefetch parts: the bounded [`Ring`], the
 //!   device-resident [`StagedBatch`], and the [`BatchSpecs`] it uploads
-//!   against.
+//!   against — plus their batched counterparts ([`StackedBatch`] /
+//!   [`StackedStagedBatch`] / [`StackedBatchSpecs`]) that pack J
+//!   clients' batches into one lane-stacked upload.
 //! * [`model`] — [`ModelOps`]: the split-model operations
 //!   (client_forward / server_train_step / client_backward / evaluate /
 //!   full_train_step, plus the staged train_step / evaluate_staged /
@@ -32,4 +34,7 @@ pub use device::DeviceBundle;
 pub use exec::{ArgValue, EntryTiming, ExecArg, Runtime, BATCH_UPLOAD, WEIGHT_SYNC, WEIGHT_UPLOAD};
 pub use manifest::{AliasPair, DonationSpec, Dtype, EntrySpec, Manifest, TensorSpec};
 pub use model::{EvalResult, ModelOps, StepStats};
-pub use staging::{BatchSpecs, Ring, StagedBatch, PREFETCH_DEPTH};
+pub use staging::{
+    pipelined, BatchSpecs, Ring, StackedBatch, StackedBatchSpecs, StackedStagedBatch, StagedBatch,
+    PREFETCH_DEPTH,
+};

@@ -34,14 +34,30 @@
 //! the activation/gradient staying on device and weights donated per
 //! half.  Every combination is numerics-neutral — same batches, same
 //! order, same bits.
-
-use std::sync::{Condvar, Mutex};
+//!
+//! ## Batched multi-client dispatch
+//!
+//! [`ModelOps::train_chunk_staged`] trains up to J same-shard clients
+//! (each against its own server copy) in **one** PJRT dispatch per
+//! step, through the `batched_train_step_j<J>` entries: all J lanes'
+//! weights are stacked on device, each step uploads one stacked batch
+//! (lanes a client has exhausted — or spare tail lanes — are padded
+//! with zero-weight rows, an exact bitwise no-op on their weights),
+//! and per-lane stats come back as (J,) vectors.  Per lane this is
+//! bit-identical to the sequential loop (the batched entry *unrolls*
+//! the lanes rather than vmapping them, so each lane's op sequence is
+//! exactly `full_train_step`'s — see `python/compile/model.py`);
+//! `rust/tests/batched_equivalence.rs` proves it end to end.
+//! `SPLITFED_NO_BATCHED=1` skips compiling the batched entries, making
+//! [`ModelOps::batch_width`] fall back to sequential dispatch.
 
 use anyhow::{bail, Result};
 
 use super::device::DeviceBundle;
-use super::exec::{ArgValue, ExecArg, Runtime, BATCH_UPLOAD};
-use super::staging::{BatchSpecs, Ring, StagedBatch, PREFETCH_DEPTH};
+use super::exec::{ArgValue, ExecArg, Runtime, BATCH_UPLOAD, WEIGHT_SYNC, WEIGHT_UPLOAD};
+use super::staging::{
+    pipelined, BatchSpecs, StackedBatch, StackedBatchSpecs, StackedStagedBatch, StagedBatch,
+};
 use crate::data::{Batch, Dataset};
 use crate::error::SplitFedError;
 use crate::netsim::ComputeProfile;
@@ -216,6 +232,28 @@ impl<'a> ModelOps<'a> {
     /// the fused step.
     pub fn split_steps(&self) -> bool {
         self.split_step
+    }
+
+    /// Resolve the lane width the batched client path will run at from
+    /// the `ExpConfig::batch_clients` knob: `0` asks for the widest
+    /// compiled `batched_train_step_j<J>` entry, `1` forces sequential
+    /// per-client dispatch, anything else picks the widest compiled
+    /// width ≤ the request.  Returns 1 (sequential) whenever batching
+    /// cannot or should not run: host-literal residency, split-step A/B
+    /// mode (lane stacking would fold away the per-message accounting
+    /// the split entries exist to measure), or no batched entries
+    /// compiled (`SPLITFED_NO_BATCHED=1`, old artifact sets).
+    pub fn batch_width(&self, requested: usize) -> usize {
+        if !self.device_weights || self.split_step || requested == 1 {
+            return 1;
+        }
+        let widths = self.rt.batched_widths();
+        let best = if requested == 0 {
+            widths.last().copied()
+        } else {
+            widths.into_iter().filter(|&w| w <= requested).max()
+        };
+        best.unwrap_or(1).max(1)
     }
 
     pub fn train_batch_size(&self) -> usize {
@@ -576,7 +614,8 @@ impl<'a> ModelOps<'a> {
     /// On the device path with prefetch on (the default), a producer
     /// thread stages batch N+1's `x`/`y`/`w` as device buffers while
     /// step N executes, handing them across through a bounded
-    /// [`Ring`] of depth [`PREFETCH_DEPTH`]; the learning rate is
+    /// [`Ring`](super::staging::Ring) of depth
+    /// [`super::staging::PREFETCH_DEPTH`]; the learning rate is
     /// uploaded once ahead of the loop, so steady-state steps launch
     /// with **zero** synchronous host→device copies.  Batch ranges,
     /// bytes, and step order are identical to the synchronous loop —
@@ -610,16 +649,12 @@ impl<'a> ModelOps<'a> {
     }
 
     /// The double-buffered upload pipeline behind
-    /// [`ModelOps::train_epochs_staged`].
-    ///
-    /// Shutdown protocol (all transitions under one mutex + condvar):
-    /// the producer sets `producer_done` (with `producer_err` on upload
-    /// failure) when it runs out of batches; the consumer sets `abort`
-    /// on *every* exit — normal, error, or panic (via a drop guard) —
-    /// so the producer can never stay parked on a full ring while
-    /// `thread::scope` waits to join it.  Batches the pipeline never
-    /// ran free their device buffers by plain ownership: the ring and
-    /// any in-flight [`StagedBatch`] drop on the way out.
+    /// [`ModelOps::train_epochs_staged`], expressed over the generic
+    /// [`pipelined`] producer/consumer harness: the producer
+    /// closure walks the exact `Dataset::batches` ranges (via
+    /// [`LaneCursor`], byte-identical batches, a padded tail staged
+    /// exactly once) and uploads each as a [`StagedBatch`] while the
+    /// consumer executes the previous step.
     fn train_epochs_pipelined(
         &self,
         client: &mut DeviceBundle,
@@ -631,114 +666,263 @@ impl<'a> ModelOps<'a> {
         let b = self.train_batch_size();
         let specs = BatchSpecs::resolve(self.rt.manifest())?;
         let lr_buf = self.upload_lr(&specs, lr)?;
-
-        struct PipeState {
-            ring: Ring<StagedBatch>,
-            producer_done: bool,
-            producer_err: Option<anyhow::Error>,
-            abort: bool,
-        }
-        fn lock(st: &Mutex<PipeState>) -> std::sync::MutexGuard<'_, PipeState> {
-            st.lock().unwrap_or_else(|e| e.into_inner())
-        }
-        struct AbortGuard<'g> {
-            state: &'g Mutex<PipeState>,
-            cv: &'g Condvar,
-        }
-        impl Drop for AbortGuard<'_> {
-            fn drop(&mut self) {
-                let mut st = lock(self.state);
-                st.abort = true;
-                self.cv.notify_all();
-            }
-        }
-
-        let state = Mutex::new(PipeState {
-            ring: Ring::new(PREFETCH_DEPTH),
-            producer_done: false,
-            producer_err: None,
-            abort: false,
-        });
-        let cv = Condvar::new();
-
+        let mut cursor = LaneCursor::new();
+        let mut scratch = Batch::empty();
         let mut stats = StepStats::default();
-        std::thread::scope(|scope| -> Result<()> {
-            scope.spawn(|| {
-                let produce = || -> Result<()> {
-                    let mut scratch = Batch::empty();
-                    for _ in 0..epochs {
-                        let mut pos = 0usize;
-                        while pos < ds.len() {
-                            let take = (ds.len() - pos).min(b);
-                            // One contiguous range per batch, advancing
-                            // by `take` — byte-identical to the
-                            // `Dataset::batches` iterator, and a padded
-                            // tail is staged exactly once.
-                            ds.fill_batch(pos, take, b, &mut scratch);
-                            // The overlap: this upload runs while the
-                            // training thread executes earlier steps.
-                            let staged = StagedBatch::upload(self.rt, &specs, &scratch)?;
-                            let mut st = lock(&state);
-                            while st.ring.is_full() && !st.abort {
-                                st = cv.wait(st).unwrap_or_else(|e| e.into_inner());
-                            }
-                            if st.abort {
-                                // Consumer bailed; `staged` (and the
-                                // queued ring slots) free on drop.
-                                return Ok(());
-                            }
-                            if st.ring.push(staged).is_err() {
-                                return Err(SplitFedError::Runtime(
-                                    "prefetch ring refused a push after reporting space".into(),
-                                )
-                                .into());
-                            }
-                            cv.notify_all();
-                            drop(st);
-                            pos += take;
-                        }
-                    }
-                    Ok(())
-                };
-                let result = produce();
-                let mut st = lock(&state);
-                st.producer_done = true;
-                if let Err(e) = result {
-                    st.producer_err = Some(e);
+        pipelined(
+            move || match cursor.next_range(ds.len(), b, epochs) {
+                Some((pos, take)) => {
+                    ds.fill_batch(pos, take, b, &mut scratch);
+                    // The overlap: this upload runs while the training
+                    // thread executes earlier steps.
+                    Ok(Some(StagedBatch::upload(self.rt, &specs, &scratch)?))
                 }
-                cv.notify_all();
-            });
-
-            let _guard = AbortGuard {
-                state: &state,
-                cv: &cv,
-            };
-            loop {
-                let staged = {
-                    let mut st = lock(&state);
-                    loop {
-                        if let Some(sb) = st.ring.pop() {
-                            cv.notify_all(); // a slot freed: wake the producer
-                            break Some(sb);
-                        }
-                        if st.producer_done {
-                            break None;
-                        }
-                        st = cv.wait(st).unwrap_or_else(|e| e.into_inner());
-                    }
-                };
-                let Some(staged) = staged else { break };
+                None => Ok(None),
+            },
+            |staged| {
                 stats.merge(self.step_staged(client, server, &staged, &lr_buf)?);
                 // `staged` drops here: a consumed batch's buffers are
                 // freed and can never be handed out again.
-            }
-            let mut st = lock(&state);
-            if let Some(e) = st.producer_err.take() {
-                return Err(e);
-            }
-            Ok(())
-        })?;
+                Ok(())
+            },
+        )?;
         Ok(stats)
+    }
+
+    /// Train up to J same-shard clients — each against its **own**
+    /// server copy — in one batched PJRT dispatch per step, through the
+    /// width-`width` `batched_train_step_j<J>` entry.
+    ///
+    /// Per lane the numerics are bit-identical to running
+    /// [`ModelOps::train_epochs_staged`] on that client alone: the
+    /// batched entry unrolls the lanes (same op sequence per lane as
+    /// `full_train_step`), lanes step through their datasets on the
+    /// same [`LaneCursor`] ranges as the sequential loop, per-lane
+    /// stats accumulate in the same f64 order, and a lane with nothing
+    /// left to train (shorter dataset, or a spare lane when the chunk
+    /// is narrower than `width`) is padded with zero-weight rows — an
+    /// exact bitwise no-op on its weights (`w - lr·0 = w`), with its
+    /// stats discarded.  Spare lanes' weight slots replicate lane 0 and
+    /// their outputs are thrown away.
+    ///
+    /// Host↔device traffic per chunk: stacked weights up once
+    /// ([`WEIGHT_UPLOAD`]) and back once ([`WEIGHT_SYNC`]), the lr once,
+    /// one stacked batch per step ([`BATCH_UPLOAD`], prefetched on the
+    /// producer thread when the pipeline knob is on), and three (J,)
+    /// stat vectors per step — the same bytes per client-step as the
+    /// sequential path, in 1/J as many dispatches.  Donation applies to
+    /// the stacked weight buffers whenever the batched entry has a
+    /// donated executable compiled.
+    ///
+    /// `clients`, `servers`, and `datasets` are parallel slices (one
+    /// lane each, at most `width`); the bundles are updated in place on
+    /// success, and a training/dispatch error leaves every bundle at
+    /// its round-start weights (the host copies are only replaced after
+    /// the whole chunk trains and syncs back).  Returns per-lane stats
+    /// in lane order.
+    pub fn train_chunk_staged(
+        &self,
+        width: usize,
+        clients: &mut [Bundle],
+        servers: &mut [Bundle],
+        datasets: &[&Dataset],
+        epochs: usize,
+        lr: f32,
+    ) -> Result<Vec<StepStats>> {
+        let n = clients.len();
+        if n == 0 || servers.len() != n || datasets.len() != n {
+            bail!(
+                "train_chunk_staged: {n} clients, {} servers, {} datasets",
+                servers.len(),
+                datasets.len()
+            );
+        }
+        let entry = self
+            .rt
+            .batched_entry(width)
+            .ok_or_else(|| {
+                SplitFedError::Runtime(format!(
+                    "train_chunk_staged: no batched entry compiled for width {width} \
+                     (SPLITFED_NO_BATCHED set, or artifacts lack batched_train_step_j{width})"
+                ))
+            })?
+            .to_string();
+        if n > width {
+            bail!("train_chunk_staged: {n} lanes for the width-{width} entry");
+        }
+        let espec = self.rt.manifest().entry(&entry)?.clone();
+        let specs = StackedBatchSpecs::resolve(self.rt.manifest(), &entry)?;
+        let b = self.train_batch_size();
+        let nc = clients[0].len();
+        let ns = servers[0].len();
+        let n_weights = nc + ns;
+        if espec.inputs.len() != n_weights + 4 {
+            bail!(
+                "{entry}: {} inputs for {} weight params + x/y/wts/lr",
+                espec.inputs.len(),
+                n_weights
+            );
+        }
+
+        // Stack the chunk's weights host-side, lane-major per parameter
+        // (lane j's tensor contiguous at [j*stride, (j+1)*stride)), and
+        // upload each stacked parameter once.
+        struct StackedWeights {
+            bufs: Vec<xla::PjRtBuffer>,
+        }
+        let lane_tensor = |j: usize, k: usize| -> &Tensor {
+            if k < nc {
+                &clients[j].tensors()[k]
+            } else {
+                &servers[j].tensors()[k - nc]
+            }
+        };
+        let mut bufs = Vec::with_capacity(n_weights);
+        for (k, ispec) in espec.inputs.iter().take(n_weights).enumerate() {
+            let elems = ispec.elements();
+            if elems % width != 0 {
+                bail!(
+                    "{entry}: input {} has {elems} elements, not divisible into {width} lanes",
+                    ispec.name
+                );
+            }
+            let stride = elems / width;
+            let mut data = Vec::with_capacity(elems);
+            for j in 0..width {
+                // Spare lanes replicate lane 0: any finite weights do —
+                // their zero-weight batches make the lane a no-op and
+                // their outputs are discarded — and replication avoids
+                // inventing a second weight-initialization path.
+                let src = if j < n { j } else { 0 };
+                let t = lane_tensor(src, k);
+                if t.data().len() != stride {
+                    bail!(
+                        "{entry}: lane {src} param {} has {} elements, lane stride {stride}",
+                        ispec.name,
+                        t.data().len()
+                    );
+                }
+                data.extend_from_slice(t.data());
+            }
+            bufs.push(self.rt.upload_arg(WEIGHT_UPLOAD, &ArgValue::F32(&data), ispec)?);
+        }
+        let mut weights = StackedWeights { bufs };
+        let lr_buf = self.rt.upload_arg(BATCH_UPLOAD, &ArgValue::F32(&[lr]), &specs.lr)?;
+        let donate = self.donate_weights && self.rt.has_donation(&entry);
+
+        let mut cursors = vec![LaneCursor::new(); n];
+        let mut lane_stats = vec![StepStats::default(); n];
+        let mut stacked = StackedBatch::new(&specs)?;
+        let mut scratch = Batch::empty();
+
+        // Producer: assemble + upload the next stacked batch (each real
+        // lane advances its own cursor; exhausted and spare lanes are
+        // padded).  Done when no lane has a real batch left.
+        let mut produce = move || -> Result<Option<StackedStagedBatch>> {
+            let mut any = false;
+            for j in 0..width {
+                let next = if j < n {
+                    cursors[j].next_range(datasets[j].len(), b, epochs)
+                } else {
+                    None
+                };
+                match next {
+                    Some((pos, take)) => {
+                        datasets[j].fill_batch(pos, take, b, &mut scratch);
+                        stacked.set_lane(j, &scratch)?;
+                        any = true;
+                    }
+                    None => stacked.pad_lane(j)?,
+                }
+            }
+            if !any {
+                return Ok(None);
+            }
+            Ok(Some(StackedStagedBatch::upload(self.rt, &specs, &stacked)?))
+        };
+
+        // Consumer: one batched dispatch, stats merged per active lane
+        // (each lane's f64 accumulation order matches its sequential
+        // per-step order), stacked weights adopted back for the next
+        // step (in place on the donation path).
+        let mut consume = |staged: StackedStagedBatch| -> Result<()> {
+            let mut args: Vec<ExecArg> = Vec::with_capacity(n_weights + 4);
+            if donate {
+                let taken = std::mem::take(&mut weights.bufs);
+                args.extend(taken.into_iter().map(ExecArg::Donate));
+            } else {
+                for buf in &weights.bufs {
+                    args.push(ExecArg::Device(buf));
+                }
+            }
+            args.push(ExecArg::Device(&staged.x));
+            args.push(ExecArg::Device(&staged.y));
+            args.push(ExecArg::Device(&staged.w));
+            args.push(ExecArg::Device(&lr_buf));
+            let mut out = self.rt.execute_buffers(&entry, args)?;
+            let want = 3 + n_weights;
+            if out.len() != want {
+                bail!("{entry}: {} output buffers for {want} slots", out.len());
+            }
+            let new_weights = out.split_off(3);
+            let loss = self.rt.read_output(&entry, 0, &out[0])?;
+            let corr = self.rt.read_output(&entry, 1, &out[1])?;
+            let ws = self.rt.read_output(&entry, 2, &out[2])?;
+            if loss.len() < n || corr.len() < n || ws.len() < n {
+                bail!("{entry}: stats outputs narrower than {n} lanes");
+            }
+            for (j, stats) in lane_stats.iter_mut().enumerate() {
+                if staged.active[j] {
+                    stats.merge(StepStats {
+                        loss_sum: loss.data()[j] as f64,
+                        correct_sum: corr.data()[j] as f64,
+                        wsum: ws.data()[j] as f64,
+                    });
+                }
+            }
+            weights.bufs = new_weights;
+            Ok(())
+        };
+
+        if self.prefetches_batches() {
+            pipelined(&mut produce, &mut consume)?;
+        } else {
+            loop {
+                let Some(staged) = produce()? else { break };
+                consume(staged)?;
+            }
+        }
+        drop(produce);
+        drop(consume);
+
+        // Read the stacked weights home once and unstack each lane's
+        // slice back into its host bundle — the batched analogue of a
+        // lazy DeviceBundle sync, atomic per bundle via replace_tensors.
+        let mut new_client: Vec<Vec<Tensor>> = (0..n).map(|_| Vec::with_capacity(nc)).collect();
+        let mut new_server: Vec<Vec<Tensor>> = (0..n).map(|_| Vec::with_capacity(ns)).collect();
+        for (k, ispec) in espec.inputs.iter().take(n_weights).enumerate() {
+            let t = self
+                .rt
+                .read_buffer(WEIGHT_SYNC, &weights.bufs[k], ispec.shape.clone())?;
+            let stride = ispec.elements() / width;
+            let base_shape = ispec.shape[1..].to_vec();
+            for j in 0..n {
+                let lane = Tensor::new(
+                    base_shape.clone(),
+                    t.data()[j * stride..(j + 1) * stride].to_vec(),
+                )?;
+                if k < nc {
+                    new_client[j].push(lane);
+                } else {
+                    new_server[j].push(lane);
+                }
+            }
+        }
+        for (j, (nc_t, ns_t)) in new_client.into_iter().zip(new_server).enumerate() {
+            clients[j].replace_tensors(nc_t)?;
+            servers[j].replace_tensors(ns_t)?;
+        }
+        Ok(lane_stats)
     }
 
     /// Evaluate staged weights over a dataset without disturbing them —
@@ -1002,6 +1186,46 @@ impl<'a> ModelOps<'a> {
     }
 }
 
+/// A lane's position in its epochs-over-dataset walk, reproducing the
+/// exact contiguous `(pos, take)` ranges — and therefore the exact
+/// bytes, zero-weight tail padding included — that the sequential
+/// `for epoch { for batch in ds.batches(b) }` loop visits.  Shared by
+/// the single-client prefetch producer and each lane of the batched
+/// chunk loop, so every path stages identical batches in identical
+/// order.
+#[derive(Clone, Copy, Debug, Default)]
+struct LaneCursor {
+    epoch: usize,
+    pos: usize,
+}
+
+impl LaneCursor {
+    fn new() -> LaneCursor {
+        LaneCursor::default()
+    }
+
+    /// The next batch range, or `None` when all `epochs` passes over a
+    /// `len`-row dataset are done (always `None` for an empty dataset,
+    /// zero epochs, or a zero batch size — and stays `None` forever
+    /// after).
+    fn next_range(&mut self, len: usize, b: usize, epochs: usize) -> Option<(usize, usize)> {
+        if len == 0 || epochs == 0 || b == 0 {
+            return None;
+        }
+        if self.pos >= len {
+            self.epoch += 1;
+            self.pos = 0;
+        }
+        if self.epoch >= epochs {
+            return None;
+        }
+        let take = (len - self.pos).min(b);
+        let range = (self.pos, take);
+        self.pos += take;
+        Some(range)
+    }
+}
+
 /// Borrow a staged bundle's device buffers for a fresh-output step — a
 /// typed [`SplitFedError::Runtime`] (never a panic on a shard worker
 /// thread) when the weights aren't readable: host-resident, or donated
@@ -1099,6 +1323,38 @@ mod tests {
             .iter()
             .map(|&n| Tensor::new(vec![n], vec![2.0; n]).unwrap())
             .collect()
+    }
+
+    #[test]
+    fn lane_cursor_reproduces_sequential_ranges() {
+        for (len, b, epochs) in [
+            (5usize, 2usize, 3usize),
+            (4, 4, 1),
+            (3, 8, 2),
+            (7, 3, 2),
+            (0, 2, 3),
+            (5, 2, 0),
+            (5, 0, 2),
+        ] {
+            let mut want = Vec::new();
+            for _ in 0..epochs {
+                let mut pos = 0;
+                while b > 0 && pos < len {
+                    let take = (len - pos).min(b);
+                    want.push((pos, take));
+                    pos += take;
+                }
+            }
+            let mut cur = LaneCursor::new();
+            let mut got = Vec::new();
+            while let Some(r) = cur.next_range(len, b, epochs) {
+                got.push(r);
+                assert!(got.len() <= want.len(), "cursor overran: len={len} b={b} epochs={epochs}");
+            }
+            assert_eq!(got, want, "len={len} b={b} epochs={epochs}");
+            // an exhausted cursor stays exhausted
+            assert_eq!(cur.next_range(len, b, epochs), None);
+        }
     }
 
     #[test]

@@ -30,6 +30,8 @@
 //! batches, same bytes, same order — proven bit-identical in
 //! `rust/tests/buffer_equivalence.rs`.
 
+use std::sync::{Condvar, Mutex};
+
 use anyhow::Result;
 
 use super::exec::{ArgValue, Runtime, BATCH_UPLOAD};
@@ -99,6 +101,120 @@ impl<T> Ring<T> {
     pub fn pop(&mut self) -> Option<T> {
         self.slots.pop_front()
     }
+}
+
+/// Generic double-buffered producer/consumer pipeline: `produce` runs
+/// on a spawned thread, staging items (device-buffer uploads) until it
+/// returns `Ok(None)`; `consume` runs on the calling thread, taking
+/// items in production order through a bounded [`Ring`] of depth
+/// [`PREFETCH_DEPTH`].  Item order — and therefore numerics — is
+/// exactly the synchronous `loop { produce()? -> consume()? }`.
+///
+/// Shutdown protocol (all transitions under one mutex + condvar): the
+/// producer sets `producer_done` (with `producer_err` on failure) when
+/// it runs out of items; the consumer sets `abort` on *every* exit —
+/// normal, error, or panic (via a drop guard) — so the producer can
+/// never stay parked on a full ring while `thread::scope` waits to
+/// join it.  Items the pipeline never consumed free their device
+/// buffers by plain ownership: the ring and any in-flight item drop on
+/// the way out.  `rust/tests/prop_ring.rs` drives this exact function
+/// with drop-tracked items to prove the drain-without-leak claim under
+/// consumer failure (the shard-crash-mid-round case).
+pub fn pipelined<T: Send>(
+    produce: impl FnMut() -> Result<Option<T>> + Send,
+    mut consume: impl FnMut(T) -> Result<()>,
+) -> Result<()> {
+    struct PipeState<T> {
+        ring: Ring<T>,
+        producer_done: bool,
+        producer_err: Option<anyhow::Error>,
+        abort: bool,
+    }
+    fn lock<T>(st: &Mutex<PipeState<T>>) -> std::sync::MutexGuard<'_, PipeState<T>> {
+        st.lock().unwrap_or_else(|e| e.into_inner())
+    }
+    struct AbortGuard<'g, T> {
+        state: &'g Mutex<PipeState<T>>,
+        cv: &'g Condvar,
+    }
+    impl<T> Drop for AbortGuard<'_, T> {
+        fn drop(&mut self) {
+            let mut st = lock(self.state);
+            st.abort = true;
+            self.cv.notify_all();
+        }
+    }
+
+    let state = Mutex::new(PipeState {
+        ring: Ring::new(PREFETCH_DEPTH),
+        producer_done: false,
+        producer_err: None,
+        abort: false,
+    });
+    let cv = Condvar::new();
+
+    std::thread::scope(|scope| -> Result<()> {
+        scope.spawn(|| {
+            let mut produce = produce;
+            let mut run = || -> Result<()> {
+                loop {
+                    let Some(item) = produce()? else {
+                        return Ok(());
+                    };
+                    let mut st = lock(&state);
+                    while st.ring.is_full() && !st.abort {
+                        st = cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                    }
+                    if st.abort {
+                        // Consumer bailed; `item` (and the queued
+                        // ring slots) free on drop.
+                        return Ok(());
+                    }
+                    if st.ring.push(item).is_err() {
+                        return Err(SplitFedError::Runtime(
+                            "prefetch ring refused a push after reporting space".into(),
+                        )
+                        .into());
+                    }
+                    cv.notify_all();
+                }
+            };
+            let result = run();
+            let mut st = lock(&state);
+            st.producer_done = true;
+            if let Err(e) = result {
+                st.producer_err = Some(e);
+            }
+            cv.notify_all();
+        });
+
+        let _guard = AbortGuard {
+            state: &state,
+            cv: &cv,
+        };
+        loop {
+            let item = {
+                let mut st = lock(&state);
+                loop {
+                    if let Some(it) = st.ring.pop() {
+                        cv.notify_all(); // a slot freed: wake the producer
+                        break Some(it);
+                    }
+                    if st.producer_done {
+                        break None;
+                    }
+                    st = cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                }
+            };
+            let Some(item) = item else { break };
+            consume(item)?;
+        }
+        let mut st = lock(&state);
+        if let Some(e) = st.producer_err.take() {
+            return Err(e);
+        }
+        Ok(())
+    })
 }
 
 /// The manifest tensor specs a staged batch uploads against, resolved
@@ -173,6 +289,191 @@ impl StagedBatch {
     }
 }
 
+/// The manifest specs of one batched train-step entry
+/// (`batched_train_step_j<J>`): J training lanes per dispatch, every
+/// batch tensor carrying a leading lane axis.  Resolved once per chunk
+/// loop, like [`BatchSpecs`] for the single-client path.
+#[derive(Clone, Debug)]
+pub struct StackedBatchSpecs {
+    /// The batched entry name these specs came from.
+    pub entry: String,
+    /// Lane count J (the manifest's `batch_clients`).
+    pub lanes: usize,
+    pub x: TensorSpec,
+    pub y: TensorSpec,
+    pub w: TensorSpec,
+    pub lr: TensorSpec,
+}
+
+impl StackedBatchSpecs {
+    /// Resolve the stacked batch slots of batched entry `entry` from the
+    /// manifest; typed errors on artifact drift (missing slot, missing
+    /// `batch_clients`).
+    pub fn resolve(manifest: &Manifest, entry: &str) -> Result<StackedBatchSpecs> {
+        let spec = manifest.entry(entry)?;
+        let lanes = spec.batch_clients.ok_or_else(|| {
+            SplitFedError::Runtime(format!("{entry}: entry has no batch_clients in manifest"))
+        })?;
+        let find = |name: &str| -> Result<TensorSpec> {
+            spec.inputs
+                .iter()
+                .find(|s| s.name == name)
+                .cloned()
+                .ok_or_else(|| {
+                    SplitFedError::Runtime(format!("{entry}: no `{name}` input in manifest")).into()
+                })
+        };
+        Ok(StackedBatchSpecs {
+            entry: entry.to_string(),
+            lanes,
+            x: find("x")?,
+            y: find("y")?,
+            w: find("wts")?,
+            lr: find("lr")?,
+        })
+    }
+}
+
+/// One host-side stacked batch: J lanes' `x`/`y`/`w` rows contiguous in
+/// lane-major order, ready to upload as the batched entry's batch args.
+///
+/// A lane is either **set** from a real [`Batch`] (its rows, including
+/// any zero-weight tail padding `fill_batch` produced) or **padded** —
+/// all-zero rows with all-zero weights, making the lane's train step an
+/// exact no-op (`w - lr*0 = w` bitwise, stats sums 0.0).  `active`
+/// records which is which so the consumer merges stats only for real
+/// lanes; the buffer is reused across steps, so every lane is rewritten
+/// (set or padded) each time.
+pub struct StackedBatch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub w: Vec<f32>,
+    /// Per lane: true when the lane carries a real batch this step.
+    pub active: Vec<bool>,
+    x_stride: usize,
+    y_stride: usize,
+    w_stride: usize,
+}
+
+impl StackedBatch {
+    /// A zeroed stacked batch sized for `specs` (every lane starts
+    /// padded/inactive).
+    pub fn new(specs: &StackedBatchSpecs) -> Result<StackedBatch> {
+        let lanes = specs.lanes;
+        let stride = |name: &str, elements: usize| -> Result<usize> {
+            if lanes == 0 || elements % lanes != 0 {
+                return Err(SplitFedError::Runtime(format!(
+                    "{}: `{name}` has {elements} elements, not divisible into {lanes} lanes",
+                    specs.entry
+                ))
+                .into());
+            }
+            Ok(elements / lanes)
+        };
+        let x_stride = stride("x", specs.x.elements())?;
+        let y_stride = stride("y", specs.y.elements())?;
+        let w_stride = stride("wts", specs.w.elements())?;
+        Ok(StackedBatch {
+            x: vec![0.0; specs.x.elements()],
+            y: vec![0; specs.y.elements()],
+            w: vec![0.0; specs.w.elements()],
+            active: vec![false; lanes],
+            x_stride,
+            y_stride,
+            w_stride,
+        })
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Copy one real batch into lane `j` and mark it active.  The batch
+    /// must be exactly one lane wide (the shared train batch size) —
+    /// a mismatch is artifact drift, refused before any copy.
+    pub fn set_lane(&mut self, j: usize, batch: &Batch) -> Result<()> {
+        self.check_lane(j)?;
+        if batch.x.len() != self.x_stride
+            || batch.y.len() != self.y_stride
+            || batch.w.len() != self.w_stride
+        {
+            return Err(SplitFedError::Runtime(format!(
+                "stacked lane {j}: batch rows ({}, {}, {}) do not match lane strides ({}, {}, {})",
+                batch.x.len(),
+                batch.y.len(),
+                batch.w.len(),
+                self.x_stride,
+                self.y_stride,
+                self.w_stride
+            ))
+            .into());
+        }
+        self.x[j * self.x_stride..(j + 1) * self.x_stride].copy_from_slice(&batch.x);
+        self.y[j * self.y_stride..(j + 1) * self.y_stride].copy_from_slice(&batch.y);
+        self.w[j * self.w_stride..(j + 1) * self.w_stride].copy_from_slice(&batch.w);
+        self.active[j] = true;
+        Ok(())
+    }
+
+    /// Zero lane `j` (all-zero rows AND all-zero weights) and mark it
+    /// inactive: the lane's step becomes an exact no-op on its weights
+    /// and contributes nothing to any stats sum.
+    pub fn pad_lane(&mut self, j: usize) -> Result<()> {
+        self.check_lane(j)?;
+        self.x[j * self.x_stride..(j + 1) * self.x_stride].fill(0.0);
+        self.y[j * self.y_stride..(j + 1) * self.y_stride].fill(0);
+        self.w[j * self.w_stride..(j + 1) * self.w_stride].fill(0.0);
+        self.active[j] = false;
+        Ok(())
+    }
+
+    fn check_lane(&self, j: usize) -> Result<()> {
+        if j >= self.lanes() {
+            return Err(SplitFedError::Runtime(format!(
+                "stacked lane {j} out of range ({} lanes)",
+                self.lanes()
+            ))
+            .into());
+        }
+        Ok(())
+    }
+}
+
+/// One stacked batch resident on device, plus which lanes are real —
+/// the batched counterpart of [`StagedBatch`], produced on the prefetch
+/// producer thread and consumed by the training thread.  Dropping it
+/// frees the device buffers on every exit path.
+pub struct StackedStagedBatch {
+    pub x: xla::PjRtBuffer,
+    pub y: xla::PjRtBuffer,
+    pub w: xla::PjRtBuffer,
+    /// Per lane: merge this lane's stats (real batch) or discard them
+    /// (padding).
+    pub active: Vec<bool>,
+}
+
+// SAFETY: same argument as `StagedBatch` — the value crosses threads
+// exactly once (producer -> training thread through the Mutex-guarded
+// ring) and is only ever used by one thread at a time.
+unsafe impl Send for StackedStagedBatch {}
+
+impl StackedStagedBatch {
+    /// Upload one host stacked batch as device buffers, tallied under
+    /// [`BATCH_UPLOAD`] like the single-client staging path.
+    pub fn upload(
+        rt: &Runtime,
+        specs: &StackedBatchSpecs,
+        sb: &StackedBatch,
+    ) -> Result<StackedStagedBatch> {
+        Ok(StackedStagedBatch {
+            x: rt.upload_arg(BATCH_UPLOAD, &ArgValue::F32(&sb.x), &specs.x)?,
+            y: rt.upload_arg(BATCH_UPLOAD, &ArgValue::I32(&sb.y), &specs.y)?,
+            w: rt.upload_arg(BATCH_UPLOAD, &ArgValue::F32(&sb.w), &specs.w)?,
+            active: sb.active.clone(),
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -201,5 +502,61 @@ mod tests {
         assert_eq!(r.capacity(), 1);
         assert!(r.push(7).is_ok());
         assert_eq!(r.push(8), Err(8));
+    }
+
+    fn toy_stacked_specs() -> StackedBatchSpecs {
+        use super::super::manifest::Dtype;
+        let spec = |name: &str, shape: Vec<usize>, dtype: Dtype| TensorSpec {
+            name: name.into(),
+            shape,
+            dtype,
+        };
+        StackedBatchSpecs {
+            entry: "batched_train_step_j2".into(),
+            lanes: 2,
+            x: spec("x", vec![2, 3, 2, 2, 1], Dtype::F32),
+            y: spec("y", vec![2, 3], Dtype::I32),
+            w: spec("wts", vec![2, 3], Dtype::F32),
+            lr: spec("lr", vec![], Dtype::F32),
+        }
+    }
+
+    fn toy_batch(fill: f32) -> Batch {
+        Batch {
+            x: vec![fill; 3 * 2 * 2],
+            y: vec![fill as i32; 3],
+            w: vec![1.0; 3],
+            real: 3,
+        }
+    }
+
+    #[test]
+    fn stacked_batch_lanes_are_disjoint_and_padding_zeroes() {
+        let specs = toy_stacked_specs();
+        let mut sb = StackedBatch::new(&specs).unwrap();
+        assert_eq!(sb.lanes(), 2);
+        assert_eq!(sb.active, vec![false, false]);
+
+        sb.set_lane(0, &toy_batch(3.0)).unwrap();
+        sb.set_lane(1, &toy_batch(5.0)).unwrap();
+        assert_eq!(sb.active, vec![true, true]);
+        assert!(sb.x[..12].iter().all(|&v| v == 3.0));
+        assert!(sb.x[12..].iter().all(|&v| v == 5.0));
+        assert!(sb.w.iter().all(|&v| v == 1.0));
+
+        // padding a lane zeroes exactly that lane (rows AND weights)
+        sb.pad_lane(0).unwrap();
+        assert_eq!(sb.active, vec![false, true]);
+        assert!(sb.x[..12].iter().all(|&v| v == 0.0));
+        assert!(sb.w[..3].iter().all(|&v| v == 0.0));
+        assert!(sb.x[12..].iter().all(|&v| v == 5.0), "other lane untouched");
+        assert!(sb.w[3..].iter().all(|&v| v == 1.0));
+
+        // out-of-range lane and wrong-width batch are refused
+        assert!(sb.set_lane(2, &toy_batch(1.0)).is_err());
+        assert!(sb.pad_lane(2).is_err());
+        let mut wrong = toy_batch(1.0);
+        wrong.x.pop();
+        assert!(sb.set_lane(0, &wrong).is_err());
     }
 }

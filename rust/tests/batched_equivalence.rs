@@ -1,0 +1,311 @@
+//! Batched multi-client dispatch equivalence: stacking J same-shard
+//! clients into one `batched_train_step_j<J>` PJRT execution must be
+//! **bit-identical** to dispatching those clients sequentially — per
+//! lane stats, round records, traffic tallies, and final model digests,
+//! for J ∈ {1, 2, 4}, at `threads = 1` and `threads = 4`, composed with
+//! buffer donation and batch prefetch on/off, and including padded tail
+//! chunks (client counts not divisible by J) and ragged lanes (clients
+//! whose datasets exhaust at different steps).  Zero-weight padding
+//! makes an idle lane an exact bitwise no-op (`w - lr·0 = w`), which is
+//! the whole contract: batching is a dispatch-count knob, never a
+//! numerics knob.
+//!
+//! Requires `make artifacts`; tests no-op otherwise.  The run-level
+//! tests stay meaningful under `SPLITFED_NO_BATCHED=1` (the auto width
+//! degrades to 1 and batched == sequential trivially); the chunk-level
+//! tests skip when the batched entries aren't compiled.  Batching is
+//! selected per-run via `ExpConfig::batch_clients`, never via the
+//! environment, so both paths run in one process without racing.
+
+use std::path::PathBuf;
+
+use splitfed::algos;
+use splitfed::algos::common::{hex_digest, TrainCtx};
+use splitfed::config::{Algo, ExpConfig};
+use splitfed::data::synthetic;
+use splitfed::metrics::RunResult;
+use splitfed::netsim::{ComputeProfile, MsgKind};
+use splitfed::runtime::{ModelOps, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("runtime load"))
+}
+
+/// Bitwise run comparison, traffic included — batching must not even
+/// change the *accounted* split-protocol messages, only the PJRT
+/// dispatch count (floats compared with `==` on purpose).
+fn assert_runs_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{what}: record count");
+    for (x, y) in a.records.iter().zip(b.records.iter()) {
+        assert_eq!(x.round, y.round, "{what}: round index");
+        assert!(x.val_loss == y.val_loss, "{what}: val_loss {} != {}", x.val_loss, y.val_loss);
+        assert!(x.val_acc == y.val_acc, "{what}: val_acc");
+        assert!(x.train_loss == y.train_loss, "{what}: train_loss");
+        assert!(x.round_s == y.round_s, "{what}: round_s");
+    }
+    assert!(a.test_loss == b.test_loss, "{what}: test_loss");
+    assert!(a.test_acc == b.test_acc, "{what}: test_acc");
+    assert_eq!(a.model_digest, b.model_digest, "{what}: final model digest");
+    assert!(!a.model_digest.is_empty(), "{what}: digest populated");
+    for kind in [MsgKind::Activation, MsgKind::Gradient, MsgKind::ModelUpdate] {
+        assert_eq!(a.traffic.messages(kind), b.traffic.messages(kind), "{what}: {kind:?} msgs");
+        assert_eq!(a.traffic.bytes(kind), b.traffic.bytes(kind), "{what}: {kind:?} bytes");
+    }
+}
+
+/// A 2-shard SSFL run with every knob explicit: `cps` clients per
+/// shard, the `batch_clients` chunk width, thread count, and the
+/// prefetch/donation pipeline knobs.
+fn ssfl_run(
+    rt: &Runtime,
+    cps: usize,
+    batch_clients: usize,
+    threads: usize,
+    prefetch: bool,
+    donate: bool,
+) -> RunResult {
+    let mut cfg = ExpConfig::paper_9(Algo::Ssfl);
+    cfg.shards = 2;
+    cfg.clients_per_shard = cps;
+    cfg.nodes = 2 * (cps + 1);
+    cfg.rounds = 2;
+    cfg.samples_per_node = 48;
+    cfg.val_per_node = 24;
+    cfg.test_samples = 96;
+    cfg.threads = threads;
+    cfg.batch_clients = batch_clients;
+    cfg.validate().unwrap();
+    let ops = ModelOps::with_pipeline(rt, true, donate, prefetch, false);
+    let corpus = synthetic::generate(
+        cfg.nodes * (cfg.samples_per_node + cfg.val_per_node + 8),
+        cfg.seed,
+    );
+    let val = synthetic::generate(cfg.test_samples, cfg.seed ^ 1);
+    let test = synthetic::generate(cfg.test_samples, cfg.seed ^ 2);
+    let mut ctx =
+        TrainCtx::with_profile(&cfg, &ops, ComputeProfile::synthetic_default()).expect("ctx");
+    algos::ssfl::run_with_ctx(&mut ctx, &corpus, &val, &test).unwrap()
+}
+
+/// `batch_width` resolution: widest-compiled on auto, best fit ≤ the
+/// request otherwise, and hard 1 on the host-literal and split-step
+/// configurations (whose per-message accounting batching would wreck).
+#[test]
+fn batch_width_resolution_policy() {
+    let rt = match runtime() {
+        Some(rt) => rt,
+        None => return,
+    };
+    let ops = ModelOps::with_pipeline(&rt, true, true, true, false);
+    let widths = rt.batched_widths();
+    if widths.is_empty() {
+        eprintln!("note: no batched entries (SPLITFED_NO_BATCHED or old artifacts)");
+        assert_eq!(ops.batch_width(0), 1);
+        assert_eq!(ops.batch_width(4), 1);
+        return;
+    }
+    assert_eq!(widths, vec![1, 2, 4], "compiled batched widths");
+    assert_eq!(ops.batch_width(0), 4, "auto = widest compiled");
+    assert_eq!(ops.batch_width(1), 1, "1 = sequential");
+    assert_eq!(ops.batch_width(2), 2);
+    assert_eq!(ops.batch_width(3), 2, "3 rounds down to a compiled width");
+    assert_eq!(ops.batch_width(4), 4);
+    assert_eq!(ops.batch_width(9), 4, "over-ask caps at the widest");
+    let literal = ModelOps::with_donation(&rt, false, false);
+    assert_eq!(literal.batch_width(0), 1, "host literals never batch");
+    let split = ModelOps::with_pipeline(&rt, true, true, true, true);
+    assert_eq!(split.batch_width(0), 1, "split stepping never batches");
+}
+
+/// The headline matrix: batched J ∈ {2, 4} (and auto) vs sequential,
+/// at 1 and 4 worker threads, on a 2-shard x 4-client topology where
+/// every chunk is full — one identical run throughout.
+#[test]
+fn batched_chunks_bit_identical_at_1_and_4_threads() {
+    let rt = match runtime() {
+        Some(rt) => rt,
+        None => return,
+    };
+    let reference = ssfl_run(&rt, 4, 1, 1, true, true);
+    for (bc, threads) in [(2, 1), (4, 1), (0, 1), (2, 4), (4, 4), (0, 4)] {
+        let r = ssfl_run(&rt, 4, bc, threads, true, true);
+        assert_runs_identical(
+            &reference,
+            &r,
+            &format!("batch_clients={bc} t{threads} vs sequential t1"),
+        );
+    }
+}
+
+/// Batching composed with the other perf knobs: donation on/off x
+/// prefetch on/off, all against the plainest sequential reference
+/// (fresh buffers, synchronous uploads).
+#[test]
+fn batched_composes_with_donation_and_prefetch() {
+    let rt = match runtime() {
+        Some(rt) => rt,
+        None => return,
+    };
+    let reference = ssfl_run(&rt, 4, 1, 1, false, false);
+    for (donate, prefetch) in [(false, false), (true, false), (false, true), (true, true)] {
+        let r = ssfl_run(&rt, 4, 4, 1, prefetch, donate);
+        assert_runs_identical(
+            &reference,
+            &r,
+            &format!("batched donate={donate} prefetch={prefetch} vs sequential"),
+        );
+    }
+}
+
+/// Tail chunks: 3 clients per shard is not divisible by either batched
+/// width, so width 2 trains chunks of [2, 1] and width 4 trains one
+/// 3-lane chunk with a zero-weight spare lane — still one identical
+/// run, at both thread counts.
+#[test]
+fn padded_tail_chunk_bit_identical() {
+    let rt = match runtime() {
+        Some(rt) => rt,
+        None => return,
+    };
+    let reference = ssfl_run(&rt, 3, 1, 1, true, true);
+    for (bc, threads) in [(2, 1), (4, 1), (2, 4), (4, 4)] {
+        let r = ssfl_run(&rt, 3, bc, threads, true, true);
+        assert_runs_identical(
+            &reference,
+            &r,
+            &format!("tail batch_clients={bc} t{threads} vs sequential t1"),
+        );
+    }
+}
+
+// ------------------------------------------------- chunk-level (ModelOps)
+
+/// One lane's sequential reference: stage, run the epoch loop, sync.
+fn sequential_lane(
+    ops: &ModelOps<'_>,
+    ds: &splitfed::data::Dataset,
+    epochs: usize,
+) -> (splitfed::runtime::StepStats, String) {
+    let (client, server) = ops.init_models().unwrap();
+    let mut cdev = ops.stage_owned(client).unwrap();
+    let mut sdev = ops.stage_owned(server).unwrap();
+    let st = ops.train_epochs_staged(&mut cdev, &mut sdev, ds, epochs, 0.05).unwrap();
+    let cb = cdev.into_bundle(ops.runtime()).unwrap();
+    let sb = sdev.into_bundle(ops.runtime()).unwrap();
+    (st, format!("{}:{}", hex_digest(&cb.digest()), hex_digest(&sb.digest())))
+}
+
+/// `train_chunk_staged` vs per-client `train_epochs_staged`, lane by
+/// lane, on datasets of the given lengths (all lanes start from the
+/// shared init weights and diverge through their own data).
+fn assert_chunk_matches_sequential(
+    rt: &Runtime,
+    width: usize,
+    lens: &[usize],
+    prefetch: bool,
+    donate: bool,
+    what: &str,
+) {
+    let ops = ModelOps::with_pipeline(rt, true, donate, prefetch, false);
+    let epochs = 2;
+    let datasets: Vec<splitfed::data::Dataset> = lens
+        .iter()
+        .enumerate()
+        .map(|(j, &len)| synthetic::generate(len, 0xBA7C + j as u64))
+        .collect();
+
+    let mut clients = Vec::new();
+    let mut servers = Vec::new();
+    for _ in lens {
+        let (c, s) = ops.init_models().unwrap();
+        clients.push(c);
+        servers.push(s);
+    }
+    let refs: Vec<&splitfed::data::Dataset> = datasets.iter().collect();
+    let lane_stats = ops
+        .train_chunk_staged(width, &mut clients, &mut servers, &refs, epochs, 0.05)
+        .unwrap();
+    assert_eq!(lane_stats.len(), lens.len(), "{what}: lane stat count");
+
+    for (j, ds) in datasets.iter().enumerate() {
+        let (want, want_digest) = sequential_lane(&ops, ds, epochs);
+        let got = &lane_stats[j];
+        assert!(got.loss_sum == want.loss_sum, "{what}: lane {j} loss_sum {} != {}", got.loss_sum, want.loss_sum);
+        assert!(got.correct_sum == want.correct_sum, "{what}: lane {j} correct_sum");
+        assert!(got.wsum == want.wsum, "{what}: lane {j} wsum");
+        let got_digest = format!(
+            "{}:{}",
+            hex_digest(&clients[j].digest()),
+            hex_digest(&servers[j].digest())
+        );
+        assert_eq!(got_digest, want_digest, "{what}: lane {j} model digest");
+    }
+}
+
+/// Lane-for-lane chunk equivalence: J = 1 (the degenerate single-lane
+/// entry), J = 2 with ragged lanes (one lane exhausts epochs early, the
+/// other has a padded tail batch), and J = 4 with a 3-lane chunk (one
+/// spare lane) — each across prefetch on/off, and donation off for the
+/// widest case.
+#[test]
+fn chunk_matches_sequential_epochs_lane_for_lane() {
+    let rt = match runtime() {
+        Some(rt) => rt,
+        None => return,
+    };
+    if rt.batched_widths().is_empty() {
+        eprintln!("skipping: no batched entries compiled (SPLITFED_NO_BATCHED or old artifacts)");
+        return;
+    }
+    let b = ModelOps::new(&rt).train_batch_size();
+    assert_chunk_matches_sequential(&rt, 1, &[2 * b + 3], true, true, "j1");
+    for prefetch in [false, true] {
+        assert_chunk_matches_sequential(
+            &rt,
+            2,
+            &[3 * b + 7, b + 1],
+            prefetch,
+            true,
+            &format!("j2 ragged prefetch={prefetch}"),
+        );
+    }
+    assert_chunk_matches_sequential(&rt, 2, &[2 * b, b + 2], true, false, "j2 fresh-buffers");
+    assert_chunk_matches_sequential(&rt, 4, &[2 * b + 5, b + 1, 7], true, true, "j4 spare lane");
+}
+
+/// Chunk-call misuse is refused with typed errors, not UB: more lanes
+/// than the width, and widths with no compiled entry.
+#[test]
+fn chunk_refuses_bad_widths() {
+    let rt = match runtime() {
+        Some(rt) => rt,
+        None => return,
+    };
+    if rt.batched_widths().is_empty() {
+        eprintln!("skipping: no batched entries compiled");
+        return;
+    }
+    let ops = ModelOps::with_pipeline(&rt, true, true, true, false);
+    let ds = synthetic::generate(8, 0xE11);
+    let mut clients = Vec::new();
+    let mut servers = Vec::new();
+    for _ in 0..3 {
+        let (c, s) = ops.init_models().unwrap();
+        clients.push(c);
+        servers.push(s);
+    }
+    let refs = vec![&ds, &ds, &ds];
+    let e = ops
+        .train_chunk_staged(2, &mut clients, &mut servers, &refs, 1, 0.05)
+        .unwrap_err();
+    assert!(e.to_string().contains("lanes"), "lane overflow error: {e}");
+    let e = ops
+        .train_chunk_staged(3, &mut clients, &mut servers, &refs, 1, 0.05)
+        .unwrap_err();
+    assert!(e.to_string().contains("no batched entry"), "unknown width error: {e}");
+}

@@ -205,6 +205,57 @@ fn bsfl_survives_faults_and_ledger_stays_thread_deterministic() {
     assert_eq!(tips[0], tips[1], "faulty ledger must be thread-invariant");
 }
 
+/// Faults × the full execution pipeline: a shard crash (plus dropout
+/// and message loss) while batch prefetch is overlapping uploads and
+/// multiple clients are stacked into one batched dispatch.  The crash
+/// path must drain the staging ring without deadlock or leak (the run
+/// completing is the proof — a leak aborts PJRT, a deadlock hangs the
+/// join), and none of the pipeline knobs may bend the numerics: every
+/// combination stays bit-identical to the bare sequential reference.
+#[test]
+fn faulty_run_composes_with_prefetch_and_batched_dispatch() {
+    let rt = match runtime() {
+        Some(rt) => rt,
+        None => return,
+    };
+    let prof = ComputeProfile::synthetic_default();
+    // 2 shards x 3 clients so batched dispatch gets real multi-client
+    // chunks, with dropout carving odd-sized (padded-tail) survivor sets
+    let cfg_for = |threads: usize, batch_clients: usize| {
+        let mut cfg = faulty_run_cfg(Algo::Ssfl, threads);
+        cfg.shards = 2;
+        cfg.clients_per_shard = 3;
+        cfg.fault.shard_crash_id = 1;
+        cfg.batch_clients = batch_clients;
+        cfg.validate().unwrap();
+        cfg
+    };
+    let run = |threads: usize, batch_clients: usize, prefetch: bool| {
+        let ops = ModelOps::with_pipeline(&rt, true, true, prefetch, false);
+        let cfg = cfg_for(threads, batch_clients);
+        let (corpus, val, test) = datasets(&cfg);
+        let mut ctx = TrainCtx::with_profile(&cfg, &ops, prof).expect("ctx");
+        algos::ssfl::run_with_ctx(&mut ctx, &corpus, &val, &test).unwrap()
+    };
+    let reference = run(1, 1, false);
+    assert_eq!(reference.records.len(), 3, "all rounds completed under faults");
+    let total_failovers: usize = reference.records.iter().map(|r| r.failovers).sum();
+    assert!(total_failovers >= 1, "shard crash must trigger failover");
+    for (threads, batch_clients, prefetch) in [
+        (1, 1, true),  // crash while the prefetch ring is active
+        (1, 0, false), // crash mid-batched-dispatch
+        (1, 0, true),  // both pipelines at once
+        (4, 0, true),  // ... across a thread pool
+    ] {
+        let got = run(threads, batch_clients, prefetch);
+        assert_runs_identical(
+            &reference,
+            &got,
+            &format!("faulty t{threads} bc{batch_clients} prefetch={prefetch}"),
+        );
+    }
+}
+
 #[test]
 fn inactive_faults_match_pre_fault_baseline() {
     // A config with fault knobs at their defaults must take the exact

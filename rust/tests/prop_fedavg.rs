@@ -1,0 +1,255 @@
+//! Properties of the quorum aggregation path
+//! (`aggregation::participant_fedavg`) — no PJRT artifacts needed.
+//! This is the function every faulty shard round funnels survivors
+//! through, so its contract is pinned exactly:
+//!
+//! * the survivor mean matches a scalar fold that replays `fedavg`'s op
+//!   order element by element (`acc += 1.0 * x` over survivors, then
+//!   `acc *= 1/k`) — **bitwise**, not approximately;
+//! * an all-participants mask is bitwise `fedavg` over all bundles (the
+//!   fault-free fast path — what keeps benign runs unchanged);
+//! * a single survivor comes back bitwise unchanged (mean of one);
+//! * zero survivors and length mismatches are errors, never a silent
+//!   empty mean;
+//! * `FaultPlan::quorum_needed` matches its documented formula
+//!   `max(1, ceil(quorum_frac * total))` for any frac in (0, 1],
+//!   including exact-boundary fracs, and the `participants >= needed`
+//!   round gate flips between `needed` and `needed - 1` reports.
+
+use splitfed::aggregation::{fedavg, participant_fedavg};
+use splitfed::fault::{FaultConfig, FaultPlan};
+use splitfed::tensor::{Bundle, Tensor};
+use splitfed::util::quickcheck::forall_res;
+
+/// A two-parameter bundle ("w" of length `len`, "b" of length 3); all
+/// bundles of one case share the structure, as real client models do.
+fn bundle(len: usize, w: Vec<f32>, b: Vec<f32>) -> Bundle {
+    assert_eq!(w.len(), len);
+    Bundle::new(
+        vec!["w".into(), "b".into()],
+        vec![
+            Tensor::new(vec![len], w).unwrap(),
+            Tensor::new(vec![3], b).unwrap(),
+        ],
+    )
+    .unwrap()
+}
+
+fn random_bundles(r: &mut splitfed::util::rng::Rng, n: usize, len: usize) -> Vec<(Vec<f32>, Vec<f32>)> {
+    (0..n)
+        .map(|_| {
+            (
+                (0..len).map(|_| r.normal_f32(0.0, 2.0)).collect(),
+                (0..3).map(|_| r.normal_f32(0.0, 2.0)).collect(),
+            )
+        })
+        .collect()
+}
+
+fn build(len: usize, vals: &[(Vec<f32>, Vec<f32>)]) -> Vec<Bundle> {
+    vals.iter()
+        .map(|(w, b)| bundle(len, w.clone(), b.clone()))
+        .collect()
+}
+
+fn assert_bits_equal(got: &Bundle, want: &Bundle, what: &str) -> Result<(), String> {
+    for (tg, tw) in got.tensors().iter().zip(want.tensors().iter()) {
+        for (i, (g, w)) in tg.data().iter().zip(tw.data().iter()).enumerate() {
+            if g.to_bits() != w.to_bits() {
+                return Err(format!("{what}: element {i}: {g} != {w} (bitwise)"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// A plan whose only purpose is carrying `quorum_frac` into
+/// `quorum_needed`.  The far-future crash round marks the config active
+/// (an inactive config would collapse to `FaultPlan::inactive()`, which
+/// carries the *default* quorum_frac) without scheduling any fault.
+fn quorum_plan(frac: f64, total: usize) -> Result<FaultPlan, String> {
+    let cfg = FaultConfig {
+        quorum_frac: frac,
+        shard_crash_round: Some(usize::MAX),
+        ..FaultConfig::default()
+    };
+    cfg.validate()?;
+    Ok(FaultPlan::generate(&cfg, 1, 1, total))
+}
+
+#[test]
+fn survivor_mean_matches_scalar_reference_bitwise() {
+    forall_res(
+        0xFEDA_0001,
+        300,
+        |r| {
+            let n = 1 + r.below(6);
+            let len = 1 + r.below(8);
+            let vals = random_bundles(r, n, len);
+            let mask: Vec<bool> = (0..n).map(|_| r.below(3) > 0).collect();
+            (len, vals, mask)
+        },
+        |(len, vals, mask)| {
+            let bundles = build(*len, vals);
+            let refs: Vec<&Bundle> = bundles.iter().collect();
+            let k = mask.iter().filter(|&&p| p).count();
+            let got = participant_fedavg(&refs, mask);
+            if k == 0 {
+                return match got {
+                    Err(_) => Ok(()),
+                    Ok(_) => Err("zero survivors must be an error".into()),
+                };
+            }
+            let got = got.map_err(|e| format!("unexpected error: {e}"))?;
+            // scalar replay of fedavg's exact f32 op order over survivors:
+            // acc starts at 0, gains `1.0 * x` per survivor in order, then
+            // scales by 1/k — any reassociation would break to_bits equality
+            let survivors: Vec<&Bundle> = refs
+                .iter()
+                .zip(mask.iter())
+                .filter(|(_, &p)| p)
+                .map(|(&b, _)| b)
+                .collect();
+            let inv = 1.0f32 / k as f32;
+            for (t, tg) in got.tensors().iter().enumerate() {
+                for (i, g) in tg.data().iter().enumerate() {
+                    let mut acc = 0.0f32;
+                    for s in &survivors {
+                        acc += 1.0f32 * s.tensors()[t].data()[i];
+                    }
+                    acc *= inv;
+                    if acc.to_bits() != g.to_bits() {
+                        return Err(format!(
+                            "tensor {t} element {i}: got {g} want {acc} over {k} survivors"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn full_mask_is_bitwise_fedavg_and_single_survivor_is_identity() {
+    forall_res(
+        0xFEDA_0002,
+        200,
+        |r| {
+            let n = 1 + r.below(5);
+            let len = 1 + r.below(6);
+            let vals = random_bundles(r, n, len);
+            let lone = r.below(n);
+            (len, vals, lone)
+        },
+        |(len, vals, lone)| {
+            let bundles = build(*len, vals);
+            let refs: Vec<&Bundle> = bundles.iter().collect();
+            // all participate -> bitwise the plain fedavg fast path
+            let all = vec![true; refs.len()];
+            let full = participant_fedavg(&refs, &all).map_err(|e| e.to_string())?;
+            let plain = fedavg(&refs).map_err(|e| e.to_string())?;
+            assert_bits_equal(&full, &plain, "full mask vs fedavg")?;
+            // exactly one participates -> that bundle, bitwise (mean of one)
+            let mut mask = vec![false; refs.len()];
+            mask[*lone] = true;
+            let one = participant_fedavg(&refs, &mask).map_err(|e| e.to_string())?;
+            assert_bits_equal(&one, refs[*lone], "single survivor identity")?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn degenerate_inputs_are_errors() {
+    // no bundles at all
+    assert!(participant_fedavg(&[], &[]).is_err(), "empty input must fail");
+    // mask length mismatch
+    let a = bundle(2, vec![1.0, 2.0], vec![0.0, 0.0, 0.0]);
+    assert!(
+        participant_fedavg(&[&a], &[true, false]).is_err(),
+        "mask length mismatch must fail"
+    );
+    // nobody reported
+    assert!(
+        participant_fedavg(&[&a], &[false]).is_err(),
+        "zero survivors must fail"
+    );
+}
+
+#[test]
+fn quorum_needed_matches_formula_for_any_frac() {
+    forall_res(
+        0xFEDA_0003,
+        300,
+        |r| {
+            let total = 1 + r.below(12);
+            // random fracs in (0,1], biased toward exact boundaries j/total
+            // (at the boundary) and j/total shifted a hair either way
+            let frac = match r.below(3) {
+                0 => (1 + r.below(100)) as f64 / 100.0,
+                1 => (1 + r.below(total)) as f64 / total as f64,
+                _ => {
+                    let j = (1 + r.below(total)) as f64 / total as f64;
+                    (j + if r.below(2) == 0 { -1e-9 } else { 1e-9 }).clamp(1e-9, 1.0)
+                }
+            };
+            (total, frac)
+        },
+        |&(total, frac)| {
+            let plan = quorum_plan(frac, total)?;
+            let needed = plan.quorum_needed(total);
+            // the documented formula, computed independently
+            let want = ((frac * total as f64).ceil() as usize).clamp(1, total);
+            if needed != want {
+                return Err(format!("quorum_needed({total}) = {needed}, want {want}"));
+            }
+            if needed == 0 || needed > total {
+                return Err(format!("needed {needed} outside 1..={total}"));
+            }
+            // the round gate is `participants >= needed`: exactly `needed`
+            // reports proceed, and their aggregate is well-formed...
+            let vals: Vec<(Vec<f32>, Vec<f32>)> = (0..total)
+                .map(|i| (vec![i as f32, 1.0], vec![0.5; 3]))
+                .collect();
+            let bundles = build(2, &vals);
+            let refs: Vec<&Bundle> = bundles.iter().collect();
+            let at: Vec<bool> = (0..total).map(|i| i < needed).collect();
+            participant_fedavg(&refs, &at).map_err(|e| format!("at-quorum mask: {e}"))?;
+            // ...while one report short fails the gate (and, at needed == 1,
+            // the aggregation itself rejects the empty survivor set)
+            let under = needed - 1;
+            if under >= plan.quorum_needed(total) {
+                return Err(format!("{under} reports must miss a quorum of {needed}"));
+            }
+            if needed == 1 {
+                let none: Vec<bool> = vec![false; total];
+                if participant_fedavg(&refs, &none).is_ok() {
+                    return Err("empty survivor set must be rejected".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn quorum_extremes_and_empty_shard() {
+    // frac = 1.0 demands every client; a tiny frac demands exactly one
+    for total in 1..=12 {
+        let all = quorum_plan(1.0, total).unwrap();
+        assert_eq!(all.quorum_needed(total), total, "frac=1.0, total={total}");
+        let one = quorum_plan(1e-9, total).unwrap();
+        assert_eq!(one.quorum_needed(total), 1, "frac~0, total={total}");
+    }
+    // dyadic fracs are exact in f64: the boundary is sharp
+    let half = quorum_plan(0.5, 4).unwrap();
+    assert_eq!(half.quorum_needed(4), 2);
+    assert_eq!(half.quorum_needed(5), 3, "ceil(2.5)");
+    let three_q = quorum_plan(0.75, 4).unwrap();
+    assert_eq!(three_q.quorum_needed(4), 3);
+    // an empty shard needs nobody; an inactive plan still clamps to >= 1
+    let plan = FaultPlan::generate(&FaultConfig::default(), 1, 1, 4);
+    assert_eq!(plan.quorum_needed(0), 0);
+    assert_eq!(plan.quorum_needed(1), 1, "a lone client is always needed");
+}

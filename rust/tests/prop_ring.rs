@@ -7,13 +7,21 @@
 //! * a popped (donated-to-a-step) item is never handed out again;
 //! * drop order can't leak: whatever the pipeline never consumed —
 //!   queued slots on an early (step-error) exit included — is dropped
-//!   exactly once, tracked by a live-count on every item.
+//!   exactly once, tracked by a live-count on every item;
+//! * the threaded pipeline (`runtime::pipelined`, the exact function
+//!   the training loops run) survives a consumer abort mid-stream —
+//!   the shard-crash-while-prefetching case: the producer thread joins
+//!   (no deadlock on a full ring), every staged-but-unconsumed item is
+//!   dropped exactly once (no device-buffer leak), and consumption
+//!   order stays FIFO.
 
 use std::cell::Cell;
 use std::collections::VecDeque;
 use std::rc::Rc;
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Arc;
 
-use splitfed::runtime::Ring;
+use splitfed::runtime::{pipelined, Ring};
 use splitfed::util::quickcheck::forall_res;
 
 /// Drop-counting stand-in for a `StagedBatch`: `live` counts every
@@ -124,4 +132,149 @@ fn ring_behaves_like_bounded_fifo_and_never_leaks() {
             Ok(())
         },
     );
+}
+
+/// Thread-safe drop-counting stand-in for a `StagedBatch`, for tests
+/// that cross the `pipelined` producer thread.
+struct TrackedSend {
+    id: u64,
+    live: Arc<AtomicI64>,
+}
+
+impl TrackedSend {
+    fn new(id: u64, live: &Arc<AtomicI64>) -> TrackedSend {
+        live.fetch_add(1, Ordering::SeqCst);
+        TrackedSend {
+            id,
+            live: Arc::clone(live),
+        }
+    }
+}
+
+impl Drop for TrackedSend {
+    fn drop(&mut self) {
+        self.live.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A consumer that fails mid-round — the prefetching shard whose step
+/// errors (or whose shard server crashes) — must leave nothing behind:
+/// `pipelined` has to unpark and join the producer thread (it may be
+/// blocked on a full ring at that moment) and drop every item the
+/// consumer never took, exactly once.  Hanging here is the deadlock the
+/// abort guard exists to prevent; a nonzero live count is a leaked
+/// device buffer in production.
+#[test]
+fn pipelined_drains_and_joins_on_consumer_failure() {
+    forall_res(
+        0x4156_0002,
+        60,
+        |r| {
+            let n = 1 + r.below(30);
+            // consume this many items, then fail; k == n means the
+            // consumer never fails and the run must succeed instead
+            let k = r.below(n + 1);
+            (n, k)
+        },
+        |&(n, k)| {
+            let live = Arc::new(AtomicI64::new(0));
+            let mut produced = 0usize;
+            let mut consumed: Vec<u64> = Vec::new();
+            let res = pipelined(
+                || {
+                    if produced == n {
+                        return Ok(None);
+                    }
+                    let item = TrackedSend::new(produced as u64, &live);
+                    produced += 1;
+                    Ok(Some(item))
+                },
+                |item: TrackedSend| {
+                    if consumed.len() == k {
+                        // `item` drops inside the failing consumer —
+                        // exactly what a step error does to its batch
+                        return Err(anyhow::anyhow!("simulated shard crash"));
+                    }
+                    consumed.push(item.id);
+                    Ok(())
+                },
+            );
+            match res {
+                Ok(()) if k < n => return Err("consumer failure was swallowed".into()),
+                Err(e) if k >= n => return Err(format!("unexpected failure: {e}")),
+                Err(e) if !e.to_string().contains("simulated shard crash") => {
+                    return Err(format!("wrong error surfaced: {e}"));
+                }
+                _ => {}
+            }
+            let want: Vec<u64> = (0..k.min(n) as u64).collect();
+            if consumed != want {
+                return Err(format!("consumption order diverged from FIFO: {consumed:?}"));
+            }
+            if produced > n {
+                return Err(format!("producer over-produced: {produced} > {n}"));
+            }
+            let leaked = live.load(Ordering::SeqCst);
+            if leaked != 0 {
+                return Err(format!("{leaked} staged items leaked past the pipeline exit"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A producer failure (an upload error) surfaces after the already
+/// staged items are consumed, and still frees everything.
+#[test]
+fn pipelined_propagates_producer_error_after_drain() {
+    let live = Arc::new(AtomicI64::new(0));
+    let mut produced = 0u64;
+    let mut consumed = 0usize;
+    let res = pipelined(
+        || {
+            if produced == 3 {
+                return Err(anyhow::anyhow!("simulated upload failure"));
+            }
+            let item = TrackedSend::new(produced, &live);
+            produced += 1;
+            Ok(Some(item))
+        },
+        |_item: TrackedSend| {
+            consumed += 1;
+            Ok(())
+        },
+    );
+    let err = res.expect_err("producer error must surface");
+    assert!(
+        err.to_string().contains("simulated upload failure"),
+        "wrong error: {err}"
+    );
+    assert_eq!(consumed, 3, "items staged before the failure are consumed");
+    assert_eq!(live.load(Ordering::SeqCst), 0, "leak after producer error");
+}
+
+/// The success path: every produced item is consumed once, in
+/// production order, and freed.
+#[test]
+fn pipelined_preserves_fifo_order_end_to_end() {
+    let live = Arc::new(AtomicI64::new(0));
+    let mut produced = 0u64;
+    let mut consumed: Vec<u64> = Vec::new();
+    let res = pipelined(
+        || {
+            if produced == 17 {
+                return Ok(None);
+            }
+            let item = TrackedSend::new(produced, &live);
+            produced += 1;
+            Ok(Some(item))
+        },
+        |item: TrackedSend| {
+            consumed.push(item.id);
+            Ok(())
+        },
+    );
+    res.expect("clean run");
+    assert_eq!(consumed, (0..17).collect::<Vec<u64>>());
+    assert_eq!(live.load(Ordering::SeqCst), 0);
 }

@@ -1,0 +1,195 @@
+//! Typed schema gate for the bench perf record
+//! (`results/bench/runtime_exec/roundtime.json`) — the checks that used
+//! to live as shell greps in `scripts/ci.sh`, promoted to a test that
+//! actually deserializes the document: a grep can't tell a present
+//! field from a substring, or a finite number from `1e999`.
+//!
+//! Skips (with a notice) when the record hasn't been written — the CI
+//! script runs `cargo bench --bench runtime_exec` first, then re-runs
+//! this test; plain `cargo test` on a fresh checkout stays green.
+
+use std::path::PathBuf;
+
+use splitfed::util::json::Json;
+
+/// Perf-evidence fields that must be present and strictly finite
+/// numbers: the device-residency/donation story (PR 8), the prefetch
+/// pipeline (PR 9), and the batched-dispatch counters (PR 10).
+const FINITE_NUM_FIELDS: &[&str] = &[
+    "seed",
+    "shards",
+    "rounds",
+    "threads_parallel",
+    "serial_wall_s",
+    "parallel_wall_s",
+    "serial_round_s",
+    "parallel_round_s",
+    "speedup",
+    "train_steps",
+    "literal_step_s",
+    "fresh_step_s",
+    "device_step_s",
+    "literal_transfer_bytes_per_step",
+    "host_transfer_bytes_per_step",
+    "weight_transfer_bytes_per_step",
+    "fresh_device_alloc_bytes_per_step",
+    "device_alloc_bytes_per_step",
+    "weight_alloc_bytes_per_step",
+    "prefetch_step_s",
+    "noprefetch_step_s",
+    "batch_upload_bytes_per_step",
+    "batch_staged_bytes_per_step",
+    "dispatches_per_round",
+    "dispatches_per_round_sequential",
+    "batched_speedup",
+];
+
+/// Fields the writer emits through its `finite()` guard: a number when
+/// measured, `null` when the quantity doesn't exist yet (e.g. overlap
+/// on a prefetch-disabled run).  Present either way.
+const NUM_OR_NULL_FIELDS: &[&str] = &["prefetch_overlap_s"];
+
+const BOOL_FIELDS: &[&str] = &[
+    "digests_match",
+    "donation_active",
+    "device_literal_digests_match",
+    "prefetch_active",
+    "prefetch_digests_match",
+    "batched_active",
+    "batched_digests_match",
+];
+
+fn load() -> Option<Json> {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("results/bench/runtime_exec/roundtime.json");
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(_) => {
+            eprintln!(
+                "skipping: {} not written (bench smoke runs first in scripts/ci.sh)",
+                path.display()
+            );
+            return None;
+        }
+    };
+    match Json::parse(&text) {
+        Ok(doc) => Some(doc),
+        Err(e) => panic!("roundtime.json is not valid JSON: {e}"),
+    }
+}
+
+#[test]
+fn perf_record_has_required_fields_with_sane_types() {
+    let Some(doc) = load() else { return };
+    assert!(
+        doc.get("scale").and_then(Json::as_str).is_some(),
+        "\"scale\" missing or not a string"
+    );
+    for &f in FINITE_NUM_FIELDS {
+        let v = doc.get(f).unwrap_or_else(|| panic!("missing field \"{f}\""));
+        let n = v
+            .as_f64()
+            .unwrap_or_else(|| panic!("\"{f}\" is not a number: {v:?}"));
+        assert!(n.is_finite(), "\"{f}\" = {n} is not finite");
+    }
+    for &f in NUM_OR_NULL_FIELDS {
+        match doc.get(f) {
+            Some(Json::Null) => {}
+            Some(Json::Num(n)) => assert!(n.is_finite(), "\"{f}\" = {n} is not finite"),
+            Some(v) => panic!("\"{f}\" must be a number or null, got {v:?}"),
+            None => panic!("missing field \"{f}\""),
+        }
+    }
+    for &f in BOOL_FIELDS {
+        match doc.get(f) {
+            Some(Json::Bool(_)) => {}
+            Some(v) => panic!("\"{f}\" must be a bool, got {v:?}"),
+            None => panic!("missing field \"{f}\""),
+        }
+    }
+}
+
+#[test]
+fn per_entry_timing_block_is_well_formed() {
+    let Some(doc) = load() else { return };
+    let entries = doc
+        .get("entries")
+        .and_then(Json::as_obj)
+        .expect("\"entries\" must be an object");
+    assert!(!entries.is_empty(), "per-entry timing block is empty");
+    for (name, entry) in entries {
+        for key in ["calls", "h2d_bytes", "d2h_bytes", "dev_alloc_bytes"] {
+            let n = entry
+                .get(key)
+                .and_then(Json::as_f64)
+                .unwrap_or_else(|| panic!("entry \"{name}\" lacks numeric \"{key}\""));
+            assert!(
+                n.is_finite() && n >= 0.0,
+                "entry \"{name}\".{key} = {n} out of range"
+            );
+        }
+        // stats of a zero-call entry are legitimately null (min_s starts
+        // at +inf and the writer serializes non-finite as null)
+        for key in ["mean_s", "min_s", "max_s"] {
+            match entry.get(key) {
+                Some(Json::Null) => {}
+                Some(Json::Num(n)) => {
+                    assert!(n.is_finite(), "entry \"{name}\".{key} = {n} not finite");
+                }
+                other => panic!("entry \"{name}\".{key} must be number or null, got {other:?}"),
+            }
+        }
+    }
+}
+
+/// Every number anywhere in the document is finite — the writer-side
+/// contract (`util::json` emits non-finite as null) held end to end.
+/// `Json::parse` would already reject `inf`/`NaN` tokens, so this also
+/// proves the parse saw the real on-disk bytes.
+#[test]
+fn no_non_finite_number_anywhere() {
+    fn walk(path: &str, v: &Json) {
+        match v {
+            Json::Num(n) => assert!(n.is_finite(), "{path} = {n} is not finite"),
+            Json::Arr(items) => {
+                for (i, it) in items.iter().enumerate() {
+                    walk(&format!("{path}[{i}]"), it);
+                }
+            }
+            Json::Obj(map) => {
+                for (k, it) in map {
+                    walk(&format!("{path}.{k}"), it);
+                }
+            }
+            Json::Null | Json::Bool(_) | Json::Str(_) => {}
+        }
+    }
+    let Some(doc) = load() else { return };
+    walk("$", &doc);
+}
+
+/// The batched-dispatch bookkeeping is internally coherent: stacking J
+/// clients per dispatch can only reduce the per-round dispatch count,
+/// and whichever path ran, both paths produced the same model (the
+/// bench itself hard-fails otherwise; this pins it in the record).
+#[test]
+fn batched_dispatch_counters_are_coherent() {
+    let Some(doc) = load() else { return };
+    let num = |f: &str| doc.get(f).and_then(Json::as_f64).unwrap_or(f64::NAN);
+    let flag = |f: &str| matches!(doc.get(f), Some(Json::Bool(true)));
+    let per_round = num("dispatches_per_round");
+    let sequential = num("dispatches_per_round_sequential");
+    assert!(per_round > 0.0, "dispatches_per_round = {per_round}");
+    assert!(sequential > 0.0, "dispatches_per_round_sequential = {sequential}");
+    if flag("batched_active") {
+        assert!(
+            per_round <= sequential,
+            "batching must not add dispatches: {per_round} > {sequential}"
+        );
+    }
+    assert!(
+        flag("batched_digests_match"),
+        "batched vs sequential dispatch diverged in the recorded run"
+    );
+    assert!(num("batched_speedup") > 0.0, "batched_speedup must be positive");
+}

@@ -39,41 +39,37 @@ if [ "$NO_BENCH" = "1" ]; then
 elif [ ! -f artifacts/manifest.json ]; then
     echo "==> bench smoke skipped (artifacts/ not built; run 'make artifacts')"
 else
-    # Env-hatch matrix: the buffer/donation/prefetch equivalence suite
-    # must pass with donated executables compiled (NO_DONATE=0) and with
-    # the escape hatch engaged (NO_DONATE=1, fresh-output fallback),
-    # crossed with the batch-upload pipeline on (NO_PREFETCH=0) and off
-    # (NO_PREFETCH=1, synchronous per-step uploads).
-    echo "==> env matrix (buffer_equivalence under SPLITFED_NO_DONATE={0,1} x SPLITFED_NO_PREFETCH={0,1})"
+    # Env-hatch matrix: the buffer/donation/prefetch and batched-dispatch
+    # equivalence suites must pass with donated executables compiled
+    # (NO_DONATE=0) and with the escape hatch engaged (NO_DONATE=1,
+    # fresh-output fallback), crossed with the batch-upload pipeline on
+    # (NO_PREFETCH=0) and off (NO_PREFETCH=1, synchronous per-step
+    # uploads).
+    echo "==> env matrix (buffer_equivalence + batched_equivalence under SPLITFED_NO_DONATE={0,1} x SPLITFED_NO_PREFETCH={0,1})"
     for nd in 0 1; do
         for np in 0 1; do
             echo "    SPLITFED_NO_DONATE=$nd SPLITFED_NO_PREFETCH=$np"
             SPLITFED_NO_DONATE=$nd SPLITFED_NO_PREFETCH=$np \
-                cargo test -q --test buffer_equivalence
+                cargo test -q --test buffer_equivalence --test batched_equivalence
         done
     done
+    # The batching escape hatch: with SPLITFED_NO_BATCHED=1 the batched
+    # entries never compile, batch_width() collapses to 1, and the suite
+    # must still pass (it degrades to sequential-vs-sequential).
+    echo "    SPLITFED_NO_BATCHED=1"
+    SPLITFED_NO_BATCHED=1 cargo test -q --test batched_equivalence
 
     echo "==> bench smoke (SPLITFED_BENCH_SCALE=smoke runtime_exec)"
     SPLITFED_BENCH_SCALE=smoke cargo bench --bench runtime_exec
     ROUNDTIME=results/bench/runtime_exec/roundtime.json
     [ -f "$ROUNDTIME" ] \
         || { echo "    FAIL: $ROUNDTIME not written"; exit 1; }
-    # the device-residency + donation perf evidence must be present in
-    # the record
-    for field in host_transfer_bytes_per_step weight_transfer_bytes_per_step \
-                 device_alloc_bytes_per_step weight_alloc_bytes_per_step \
-                 fresh_device_alloc_bytes_per_step donation_active \
-                 batch_upload_bytes_per_step prefetch_overlap_s \
-                 prefetch_active; do
-        grep -q "\"$field\"" "$ROUNDTIME" \
-            || { echo "    FAIL: $ROUNDTIME lacks \"$field\""; exit 1; }
-    done
-    # the per-entry dump must be valid JSON even for zero-call entries
-    # (min_s starts at +inf; the writer serializes non-finite as null)
-    if grep -qE ':(-?inf|NaN)' "$ROUNDTIME"; then
-        echo "    FAIL: $ROUNDTIME contains non-finite number tokens"; exit 1
-    fi
-    echo "    perf record: $ROUNDTIME"
+    # Schema gate: rust/tests/roundtime_schema.rs deserializes the record
+    # and asserts the residency/donation/prefetch/batched-dispatch fields
+    # are present, typed, and finite (it skips when the file is absent,
+    # so it must run after the bench wrote it).
+    cargo test -q --test roundtime_schema
+    echo "    perf record: $ROUNDTIME (schema-checked)"
 
     # Fault-matrix smoke: every algorithm must finish 2 rounds under 20%
     # dropout; the sharded protocols additionally survive a shard-server
